@@ -1,0 +1,108 @@
+"""Paper Table IV + Fig. 2: reconstruction accuracy across architectures.
+
+Runs the full cross-architectural workflow per (app × width × variant):
+regions selected once (10 jittered discovery runs), counters collected on
+the measured host CPU and the modeled TPU-v5e / TPU-v4, errors reported per
+architecture — the paper's x86->x86 / x86->ARM / vect variants mapping.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fast_mode, timed, write_csv, pct
+from repro.core import run_workflow
+from repro.hpcproxy import suite
+
+METRIC_COLS = ("cycles", "instructions", "l1d_bytes", "l2d_bytes")
+
+
+def table4(apps=None, widths=(8,), variants=("f32", "bf16")):
+    all_apps = suite()
+    if apps is None:
+        apps = (["AMGMk", "MCB", "HPCG", "miniFE"] if fast_mode()
+                else ["AMGMk", "CoMD", "graph500", "HPCG", "LULESH", "MCB",
+                      "miniFE"])
+    n_disc = 3 if fast_mode() else 10
+    reps = 5 if fast_mode() else 20
+    rows = []
+    print("\n== Table IV: selected regions, error, speed-up "
+          f"(width=8, {n_disc} discovery runs) ==")
+    hdr = (f"{'app':10s} {'var':5s} {'k/total':>10s} "
+           f"{'err_cyc_cpu':>11s} {'err_cyc_v5e':>11s} "
+           f"{'err_ins':>8s} {'largest%':>9s} {'total%':>7s} "
+           f"{'speedup':>8s}")
+    print(hdr)
+    for app_name in apps:
+        for width in widths:
+            for variant in variants:
+                key = f"table4_{app_name}_{variant}_w{width}"
+                with timed(key) as h:
+                    app = all_apps[app_name]
+                    stream, rep = run_workflow(
+                        app, width=width, variant=variant,
+                        n_discovery=n_disc, reps=reps, restarts=1)
+                    b = rep.best
+                    row = [app_name, variant, width, b.k, rep.n_regions,
+                           b.errors["cpu_host"]["cycles"],
+                           b.errors["tpu_v5e"]["cycles"],
+                           b.errors["tpu_v4"]["cycles"],
+                           b.errors["tpu_v5e"]["instructions"],
+                           b.errors["tpu_v5e"]["l1d_bytes"],
+                           b.errors["tpu_v5e"]["l2d_bytes"],
+                           b.largest_frac, b.frac_selected,
+                           b.speedup_total, b.speedup_parallel, rep.note]
+                    rows.append(row)
+                    print(f"{app_name:10s} {variant:5s} "
+                          f"{b.k:4d}/{rep.n_regions:<5d} "
+                          f"{pct(row[5]):>11s} {pct(row[6]):>11s} "
+                          f"{pct(row[8]):>8s} {pct(b.largest_frac):>9s} "
+                          f"{pct(b.frac_selected):>7s} "
+                          f"{b.speedup_total:7.1f}x")
+                    h["derived"] = (f"err_ins={row[8]:.4f};"
+                                    f"speedup={b.speedup_total:.1f}")
+    write_csv("table4_accuracy.csv",
+              ["app", "variant", "width", "k", "total_regions",
+               "err_cycles_cpu", "err_cycles_v5e", "err_cycles_v4",
+               "err_instructions", "err_l1d", "err_l2d",
+               "largest_frac", "frac_selected", "speedup_total",
+               "speedup_parallel", "note"], rows)
+    return rows
+
+
+def fig2(widths=(1, 2, 4, 8)):
+    """Error vs thread-count grid (paper Fig. 2), subset of apps."""
+    apps = ["AMGMk", "HPCG"] if fast_mode() else ["AMGMk", "HPCG", "MCB",
+                                                  "miniFE"]
+    all_apps = suite()
+    rows = []
+    print("\n== Fig. 2: estimation error vs width ==")
+    for app_name in apps:
+        for width in widths:
+            with timed(f"fig2_{app_name}_w{width}") as h:
+                stream, rep = run_workflow(
+                    all_apps[app_name], width=width, variant="f32",
+                    n_discovery=2 if fast_mode() else 3, reps=5,
+                    restarts=1)
+                b = rep.best
+                for arch in ("cpu_host", "tpu_v5e", "tpu_v4"):
+                    for m in METRIC_COLS:
+                        rows.append([app_name, width, arch, m,
+                                     b.errors[arch][m]])
+                h["derived"] = (f"err_cyc_v5e="
+                                f"{b.errors['tpu_v5e']['cycles']:.4f}")
+        errs = [r[4] for r in rows if r[0] == app_name and r[3] == "cycles"
+                and r[2] != "cpu_host"]
+        print(f"  {app_name}: modeled-cycle err across widths: "
+              f"max={max(errs):.4f}")
+    write_csv("fig2_errors.csv", ["app", "width", "arch", "metric", "error"],
+              rows)
+    return rows
+
+
+def main():
+    table4()
+    fig2()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""§Roofline: the per-(arch × shape) roofline table from dry-run artifacts.
+
+Reads experiments/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all --mesh both``), prints the single-pod roofline table with all three
+terms, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPs, and the roofline
+fraction, and nominates the three §Perf hillclimb cells.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, timed, write_csv
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_artifacts(mesh="16x16", suffix_filter=None):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        base_name = os.path.basename(path)[:-5]
+        expected = f"{r['arch']}_{r['shape']}_{r['mesh']}"
+        is_base = base_name == expected
+        if suffix_filter is None and not is_base:
+            continue
+        if suffix_filter is not None and \
+                not base_name.endswith(suffix_filter):
+            continue
+        if r["mesh"] != mesh:
+            continue
+        rows.append(r)
+    return rows
+
+
+def main():
+    with timed("roofline_table") as h:
+        rows = load_artifacts("16x16")
+        if not rows:
+            print("no dry-run artifacts found; run "
+                  "`python -m repro.launch.dryrun --all --mesh both` first")
+            h["derived"] = "missing"
+            return
+        print("\n== §Roofline (single-pod 16x16, per chip, TPU v5e) ==")
+        hdr = (f"{'arch':26s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+               f"{'coll':>9s} {'bound':>11s} {'MF/HLO':>7s} {'roofl%':>7s} "
+               f"{'peakGiB':>8s}")
+        print(hdr)
+        out = []
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            t = r["roofline"]
+            out.append([r["arch"], r["shape"],
+                        t["compute_s"], t["memory_s"], t["collective_s"],
+                        t["dominant"], r["useful_flops_ratio"],
+                        r["roofline_fraction"],
+                        r["memory"]["peak_GiB"]])
+            print(f"{r['arch']:26s} {r['shape']:12s} "
+                  f"{t['compute_s']*1e3:8.1f}m {t['memory_s']*1e3:8.1f}m "
+                  f"{t['collective_s']*1e3:8.1f}m {t['dominant']:>11s} "
+                  f"{r['useful_flops_ratio']:7.2f} "
+                  f"{100*r['roofline_fraction']:6.2f}% "
+                  f"{r['memory']['peak_GiB']:8.2f}")
+        write_csv("roofline_16x16.csv",
+                  ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                   "dominant", "model_over_hlo", "roofline_fraction",
+                   "peak_GiB"], out)
+
+        # multi-pod proof summary
+        multi = load_artifacts("2x16x16")
+        print(f"\nmulti-pod 2x16x16: {len(multi)} cells compiled "
+              "(pod axis shards; see EXPERIMENTS.md §Dry-run)")
+
+        # hillclimb nominations (decode cells have near-zero useful-flop
+        # fractions by construction; pick 'worst' among train/prefill)
+        train = [r for r in rows if r["shape"] == "train_4k"]
+        nondecode = [r for r in rows
+                     if r["shape"] in ("train_4k", "prefill_32k")]
+        worst = min(nondecode, key=lambda r: r["roofline_fraction"])
+        collb = max(rows, key=lambda r: r["roofline"]["collective_s"]
+                    / max(r["roofline"]["bound_s"], 1e-30))
+        biggest = max(train, key=lambda r: r["model_flops_global"])
+        print("\n§Perf hillclimb cells:")
+        print(f"  worst roofline fraction : {worst['arch']} × "
+              f"{worst['shape']} ({100*worst['roofline_fraction']:.2f}%)")
+        print(f"  most collective-bound   : {collb['arch']} × "
+              f"{collb['shape']}")
+        print(f"  most representative     : {biggest['arch']} × "
+              f"{biggest['shape']}")
+        h["derived"] = f"cells={len(rows)}"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Paper Tables I–III: workload suite, platforms, barrier-point counts.
+
+  table1: the Table-I application suite with its region structure
+  table2: the hardware platforms (measured host + modeled TPUs)
+  table3: total/min/max barrier points selected across 10 discovery runs
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, fast_mode, timed, write_csv
+from repro.core import discover_sets, extract_signatures
+from repro.hpcproxy import suite, EVALUATED
+from repro.instrument.hwmodel import HW_MODELS
+
+
+def table1():
+    with timed("table1_workloads") as h:
+        apps = suite()
+        rows = []
+        for name, app in apps.items():
+            stream = app.build_stream(2, "f32")
+            rows.append([name, len(stream),
+                         len({r.name for r in stream.regions}),
+                         stream.meta])
+        print("\n== Table I: applications and region structure ==")
+        print(f"{'app':12s} {'regions':>8s} {'kinds':>6s}")
+        for r in rows:
+            print(f"{r[0]:12s} {r[1]:8d} {r[2]:6d}")
+        write_csv("table1_workloads.csv",
+                  ["app", "regions", "region_kinds", "meta"], rows)
+        h["derived"] = f"apps={len(rows)}"
+
+
+def table2():
+    with timed("table2_platforms") as h:
+        print("\n== Table II: platforms ==")
+        rows = []
+        for name, hw in HW_MODELS.items():
+            rows.append([name, f"{hw.flops_bf16/1e12:.0f} TF/s bf16",
+                         f"{hw.hbm_bw/1e9:.0f} GB/s",
+                         f"{hw.link_bw/1e9:.0f} GB/s/link", hw.vector_isa])
+            print(" ", rows[-1])
+        write_csv("table2_platforms.csv",
+                  ["platform", "peak", "hbm_bw", "link_bw", "vector_isa"],
+                  rows)
+        h["derived"] = f"platforms={len(rows)}"
+
+
+def table3():
+    apps = suite()
+    names = list(EVALUATED) if not fast_mode() else ["AMGMk", "MCB", "HPCG"]
+    n_runs = 10 if not fast_mode() else 3
+    print("\n== Table III: barrier points selected "
+          f"({n_runs} discovery runs, width=8) ==")
+    print(f"{'app':12s} {'total':>7s} {'min':>5s} {'max':>5s}")
+    rows = []
+    for name in names:
+        with timed(f"table3_{name}") as h:
+            app = apps[name]
+            if name == "LULESH" and fast_mode():
+                continue
+            stream = app.build_stream(8, "f32")
+            extract_signatures(stream)
+            sets = discover_sets(stream.signatures(), n_runs=n_runs,
+                                 jitter=0.02, max_k=20,
+                                 restarts=1)
+            ks = [s.k for s in sets]
+            rows.append([name, len(stream), min(ks), max(ks)])
+            print(f"{name:12s} {len(stream):7d} {min(ks):5d} {max(ks):5d}")
+            h["derived"] = f"total={len(stream)};min={min(ks)};max={max(ks)}"
+    write_csv("table3_regions.csv", ["app", "total", "min_sel", "max_sel"],
+              rows)
+
+
+def main():
+    table1()
+    table2()
+    table3()
+
+
+if __name__ == "__main__":
+    main()

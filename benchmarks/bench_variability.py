@@ -1,0 +1,123 @@
+"""Paper §V-C + Fig. 1: measurement variability, instrumentation overhead,
+and the MCB behaviour-drift trace.
+
+  variability: coefficient of variation of measured wall over 20 reps
+  overhead:    per-region collection (sync per region) vs whole-run timing
+  fig1:        MCB per-region relative CPI / L2-MPKI analogue vs BP_1
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import emit, fast_mode, timed, write_csv
+from repro.core import extract_signatures, collect_stream_counters
+from repro.hpcproxy import suite
+from repro.instrument.counters import measure_wall
+
+
+def variability():
+    apps = suite()
+    names = ["AMGMk", "MCB", "HPCG"] if fast_mode() else \
+        ["AMGMk", "CoMD", "graph500", "HPCG", "LULESH", "MCB", "miniFE"]
+    reps = 20
+    rows = []
+    print(f"\n== §V-C: coefficient of variation over {reps} reps ==")
+    for name in names:
+        with timed(f"variability_{name}") as h:
+            app = apps[name]
+            stream = app.build_stream(2, "f32")
+            if name == "LULESH":
+                stream.regions = stream.regions[:480]
+            sample = stream.regions[:: max(1, len(stream) // 20)][:20]
+            covs = []
+            for r in sample:
+                samples = measure_wall(jax.jit(r.fn), r.args, reps=reps,
+                                       warmup=1)
+                m = float(np.mean(samples))
+                covs.append(float(np.std(samples)) / m if m else 0.0)
+            rows.append([name, float(np.mean(covs)), float(np.max(covs))])
+            print(f"  {name:10s} mean CoV {rows[-1][1]*100:5.1f}%  "
+                  f"max {rows[-1][2]*100:5.1f}%")
+            h["derived"] = f"mean_cov={rows[-1][1]:.4f}"
+    write_csv("variability.csv", ["app", "mean_cov", "max_cov"], rows)
+
+
+def overhead():
+    """Instrumented (per-region host sync) vs uninstrumented timing —
+    the PAPI-call-overhead analogue that sinks LULESH in the paper."""
+    apps = suite()
+    cases = {"AMGMk": 100, "LULESH": 480}
+    rows = []
+    print("\n== §V-C: instrumentation overhead ==")
+    for name, n in cases.items():
+        with timed(f"overhead_{name}") as h:
+            stream = apps[name].build_stream(1, "f32")
+            regions = stream.regions[:n]
+            jits = {}
+            for r in regions:
+                key = (id(r.fn), tuple(str(getattr(a, 'shape', a))
+                                       for a in r.args))
+                if key not in jits:
+                    jits[key] = jax.jit(r.fn)
+                    jax.block_until_ready(jits[key](*r.args))
+                r._jit = jits[key]
+            # uninstrumented: dispatch everything, sync once
+            t0 = time.perf_counter()
+            outs = [r._jit(*r.args) for r in regions]
+            jax.block_until_ready(outs)
+            whole = time.perf_counter() - t0
+            # instrumented: per-region sync (counter read analogue)
+            t0 = time.perf_counter()
+            for r in regions:
+                jax.block_until_ready(r._jit(*r.args))
+            instr = time.perf_counter() - t0
+            ovh = (instr - whole) / whole
+            rows.append([name, n, whole, instr, ovh])
+            print(f"  {name:10s} {n:4d} regions: whole {whole*1e3:7.1f} ms, "
+                  f"instrumented {instr*1e3:7.1f} ms -> overhead "
+                  f"{ovh*100:5.1f}%")
+            h["derived"] = f"overhead={ovh:.3f}"
+    write_csv("overhead.csv",
+              ["app", "regions", "whole_s", "instrumented_s", "overhead"],
+              rows)
+
+
+def fig1():
+    """MCB drift: relative cycles-per-instruction and l2-traffic-per-kflop
+    (MPKI analogue) of each barrier point vs BP_1."""
+    with timed("fig1_mcb") as h:
+        app = suite()["MCB"]
+        stream = app.build_stream(1, "f32")
+        extract_signatures(stream)
+        collect_stream_counters(stream, reps=10)
+        base = stream.regions[0]
+        rows = []
+        print("\n== Fig. 1: MCB per-region drift (relative to BP_1) ==")
+        print(f"{'BP':>4s} {'rel_CPI':>8s} {'rel_MPKI':>9s}")
+        for r in stream.regions:
+            cpi = (r.counter("cpu_host", "cycles")
+                   / max(r.counter("cpu_host", "instructions"), 1.0))
+            cpi0 = (base.counter("cpu_host", "cycles")
+                    / max(base.counter("cpu_host", "instructions"), 1.0))
+            mpki = (r.counter("tpu_v5e", "l2d_bytes")
+                    / max(r.counter("tpu_v5e", "instructions"), 1.0))
+            mpki0 = (base.counter("tpu_v5e", "l2d_bytes")
+                     / max(base.counter("tpu_v5e", "instructions"), 1.0))
+            rows.append([r.index + 1, cpi / cpi0, mpki / mpki0])
+            print(f"{r.index+1:4d} {cpi/cpi0:8.3f} {mpki/mpki0:9.3f}")
+        write_csv("fig1_mcb.csv", ["bp", "rel_cpi", "rel_mpki"], rows)
+        h["derived"] = f"drift_last={rows[-1][2]:.3f}"
+
+
+def main():
+    variability()
+    overhead()
+    fig1()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Shared benchmark substrate: timed CSV rows + workflow helpers."""
+from __future__ import annotations
+
+import csv
+import os
+import sys
+import time
+from contextlib import contextmanager
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def fast_mode() -> bool:
+    return os.environ.get("BENCH_FAST", "0") == "1"
+
+
+def emit(name: str, seconds: float, derived: str):
+    """The scaffold's ``name,us_per_call,derived`` CSV convention."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+    sys.stdout.flush()
+
+
+@contextmanager
+def timed(name: str):
+    t0 = time.perf_counter()
+    holder = {}
+    yield holder
+    dt = time.perf_counter() - t0
+    emit(name, dt, holder.get("derived", ""))
+
+
+def write_csv(fname: str, header, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, fname)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def pct(x: float) -> str:
+    return f"{100 * x:.2f}%"

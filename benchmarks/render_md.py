@@ -1,0 +1,44 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dry-run artifacts.
+
+    python -m benchmarks.render_md > experiments/roofline_tables.md
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.bench_roofline import load_artifacts
+
+
+def fmt_row(r):
+    t = r["roofline"]
+    return (f"| {r['arch']} | {r['shape']} | {t['compute_s']*1e3:,.1f} | "
+            f"{t['memory_s']*1e3:,.1f} | {t['collective_s']*1e3:,.1f} | "
+            f"{t['dominant']} | {r['useful_flops_ratio']:.2f} | "
+            f"{100*r['roofline_fraction']:.2f}% | "
+            f"{r['memory']['peak_GiB']:,.1f} |")
+
+
+def main():
+    print("### Single-pod (16x16 = 256 chips) roofline, per chip, TPU v5e\n")
+    print("| arch | shape | compute ms | memory ms | collective ms | "
+          "dominant | MF/HLO | roofline frac | peak GiB/dev |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for r in sorted(load_artifacts("16x16"),
+                    key=lambda r: (r["arch"], r["shape"])):
+        print(fmt_row(r))
+
+    print("\n### Multi-pod (2x16x16 = 512 chips) dry-run\n")
+    print("| arch | shape | compile s | peak GiB/dev | collective wire "
+          "GB/chip | collectives |")
+    print("|---|---|---:|---:|---:|---|")
+    for r in sorted(load_artifacts("2x16x16"),
+                    key=lambda r: (r["arch"], r["shape"])):
+        cd = r["hlo"]["collective_count"]
+        print(f"| {r['arch']} | {r['shape']} | {r['compile_s']:.1f} | "
+              f"{r['memory']['peak_GiB']:,.1f} | "
+              f"{r['hlo']['collective_bytes']/1e9:,.1f} | "
+              f"{', '.join(f'{k}:{v}' for k, v in sorted(cd.items()))} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Benchmark harness: one bench per paper table/figure + framework perf.
+
+``python -m benchmarks.run [--fast]``
+Prints ``name,us_per_call,derived`` CSV rows (per bench) and writes tables
+to experiments/bench/.  BENCH_FAST=1 (or --fast) trims region counts and
+repetitions for CI-speed runs.
+
+  bench_tables       Table I (workloads), Table II (platforms),
+                     Table III (barrier-point counts, 10 discovery runs)
+  bench_accuracy     Table IV (errors/speed-ups, width=8) + Fig. 2 grid
+  bench_variability  §V-C CoV + instrumentation overhead + Fig. 1 MCB drift
+  bench_roofline     §Roofline table from the dry-run artifacts
+  bench_kernels      kernel microbenches + VMEM footprints
+  bench_beyond       beyond-paper fixes (coalescing, splitting)
+"""
+import argparse
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    if args.fast:
+        os.environ["BENCH_FAST"] = "1"
+
+    from benchmarks import (bench_tables, bench_accuracy, bench_variability,
+                            bench_roofline, bench_kernels, bench_beyond)
+    benches = {
+        "tables": bench_tables.main,
+        "accuracy": bench_accuracy.main,
+        "variability": bench_variability.main,
+        "roofline": bench_roofline.main,
+        "kernels": bench_kernels.main,
+        "beyond": bench_beyond.main,
+    }
+    selected = (args.only.split(",") if args.only else list(benches))
+    print("name,us_per_call,derived")
+    failures = []
+    for name in selected:
+        t0 = time.time()
+        try:
+            benches[name]()
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"bench_{name},{(time.time()-t0)*1e6:.0f},"
+              f"{'FAILED' if name in failures else 'ok'}")
+    if failures:
+        print(f"FAILED benches: {failures}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Quickstart: the RegionPoint methodology end-to-end on one workload.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Selects representative regions of the HPCG proxy on this host, measures
+only the representatives, reconstructs the full-run counters on three
+architectures, and validates against the ground truth — the paper's §V-A
+workflow in ~20 lines of user code.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import run_workflow
+from repro.hpcproxy import HPCG
+
+app = HPCG(n=256, iters=60)                      # 240 barrier regions
+stream, report = run_workflow(app, width=4, variant="f32",
+                              n_discovery=5, reps=10)
+
+best = report.best
+print(f"workload: {report.workload}  regions: {report.n_regions}")
+print(f"selected {best.k} representatives "
+      f"({100*best.frac_selected:.1f}% of instructions, "
+      f"{best.speedup_total:.0f}x less work to measure)")
+for arch, errs in best.errors.items():
+    print(f"  {arch:9s} cycle err {100*errs['cycles']:.2f}%  "
+          f"instruction err {100*errs['instructions']:.2f}%")

@@ -1,0 +1,74 @@
+"""RegionPoint applied to the framework's own workload: LM training steps.
+
+A production training schedule is itself a region stream: steps differ by
+sequence-length bucket (data curricula, packing) and by phase (warmup
+profiling, eval interleaves).  Profiling every step configuration of every
+candidate model on real TPUs is the modern analogue of the paper's
+simulation cost — so select representatives and measure only those.
+
+    PYTHONPATH=src python examples/regionpoint_lm.py
+
+Builds a 64-step schedule over 4 sequence buckets for a reduced LM,
+extracts signatures from each step's jaxpr (PV + reuse-distance vectors),
+clusters SimPoint-style, and reconstructs the full schedule's cost from
+~4 representative steps on all three architectures.
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import jax
+
+from repro.configs import ARCHS, smoke_config
+from repro.core import run_workflow
+from repro.core.regions import Region, RegionStream, Workload
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step, init_state
+
+
+class LMTrainSchedule(Workload):
+    """64 training steps over seq-length buckets [32, 64, 128, 256]."""
+
+    name = "lm-train-schedule"
+
+    def __init__(self, cfg, steps=64, buckets=(32, 64, 128, 256),
+                 global_batch=2, seed=0):
+        self.cfg, self.steps, self.buckets = cfg, steps, buckets
+        self.global_batch, self.seed = global_batch, seed
+
+    def build_stream(self, width: int, variant: str):
+        cfg = self.cfg
+        state = init_state(cfg, jax.random.PRNGKey(self.seed))
+        step_fn = make_train_step(cfg, lr=1e-3)
+        rng = np.random.default_rng(self.seed)
+        regions = []
+        for i in range(self.steps):
+            seq = self.buckets[rng.integers(0, len(self.buckets))]
+            ds = SyntheticLM(vocab=cfg.vocab, seq_len=seq,
+                             global_batch=self.global_batch, seed=self.seed)
+            batch = {k: np.asarray(v) for k, v in ds.batch(i).items()}
+            regions.append(Region(index=i, name=f"step_seq{seq}",
+                                  fn=step_fn, args=(state, batch)))
+        return RegionStream(workload=self.name, width=width,
+                            variant=variant, regions=regions)
+
+
+def main():
+    cfg = smoke_config(ARCHS["codeqwen1.5-7b"])
+    wl = LMTrainSchedule(cfg)
+    stream, rep = run_workflow(wl, width=1, variant="f32",
+                               n_discovery=3, reps=5, restarts=1, max_k=8)
+    best = rep.best
+    print(f"schedule: {rep.n_regions} training steps over 4 seq buckets")
+    print(f"selected {best.k} representative steps "
+          f"({100*best.frac_selected:.1f}% of the schedule's flops)")
+    for arch, errs in best.errors.items():
+        print(f"  {arch:9s} cycles err {100*errs['cycles']:5.2f}%   "
+              f"flops err {100*errs['instructions']:5.2f}%   "
+              f"hbm err {100*errs['l2d_bytes']:5.2f}%")
+    print(f"profiling cost reduction: {best.speedup_total:.1f}x "
+          f"(parallel: {best.speedup_parallel:.1f}x)")
+
+
+if __name__ == "__main__":
+    main()

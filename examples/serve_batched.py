@@ -1,0 +1,11 @@
+"""Batched serving: prefill + decode with a KV cache (smoke-size arch).
+
+    PYTHONPATH=src python examples/serve_batched.py --arch mixtral-8x7b
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""§Perf hillclimb runner: iterate the three chosen cells, save suffixed
+artifacts, print before→after tables.
+
+    PYTHONPATH=src python scripts/hillclimb.py [--cell A|B|C]
+
+Each iteration re-lowers + re-analyses on the single-pod production mesh
+(dry-run instrument); results append to experiments/dryrun/ with suffixes.
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+ART = os.path.join(ROOT, "experiments", "dryrun")
+
+ITERS = {
+    "A": [  # llama3-405b x train_4k — flagship dense
+        ("llama3-405b", "train_4k", [], {}, "baseline"),
+        ("llama3-405b", "train_4k", ["--zero1"], {}, "A1_zero1"),
+        ("llama3-405b", "train_4k", ["--zero1", "--ce-chunk", "512"], {},
+         "A2_zero1_cechunk"),
+        ("llama3-405b", "train_4k",
+         ["--zero1", "--ce-chunk", "512", "--mode", "fsdp_tp"], {},
+         "A3_fsdp_tp"),
+        ("llama3-405b", "train_4k",
+         ["--zero1", "--ce-chunk", "512", "--mode", "fsdp_tp",
+          "--grad-accum", "4"], {}, "A4_gradaccum4"),
+    ],
+    "B": [  # codeqwen1.5-7b x train_4k — collective-bound
+        ("codeqwen1.5-7b", "train_4k", [], {}, "baseline"),
+        ("codeqwen1.5-7b", "train_4k",
+         ["--mode", "fsdp_dp", "--ce-chunk", "512"], {}, "B1_fsdp_dp"),
+        ("codeqwen1.5-7b", "train_4k",
+         ["--mode", "fsdp_dp", "--ce-chunk", "512", "--grad-accum", "2"],
+         {}, "B2_gradaccum2"),
+    ],
+    "C": [  # xlstm-1.3b x train_4k — worst fraction, memory-bound
+        ("xlstm-1.3b", "train_4k", [], {}, "baseline"),
+        ("xlstm-1.3b", "train_4k", [], {"REPRO_SLSTM_PIN": "1"},
+         "C1_slstm_pin"),
+        ("xlstm-1.3b", "train_4k", ["--ssm-chunk", "512"],
+         {"REPRO_SLSTM_PIN": "1"}, "C2_chunk512"),
+        ("xlstm-1.3b", "train_4k", ["--ssm-chunk", "1024"],
+         {"REPRO_SLSTM_PIN": "1"}, "C3_chunk1024"),
+    ],
+}
+
+
+def run_iter(arch, shape, args, env_extra, suffix):
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"),
+               **env_extra)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", "single", "--suffix", suffix] + args
+    r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                       cwd=ROOT, timeout=1800)
+    if r.returncode != 0:
+        print(f"  FAILED {suffix}: {r.stdout[-800:]}{r.stderr[-800:]}")
+        return None
+    path = os.path.join(ART, f"{arch}_{shape}_16x16_{suffix}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def fmt(res):
+    t = res["roofline"]
+    return (f"compute {t['compute_s']*1e3:9.1f}ms  memory "
+            f"{t['memory_s']*1e3:9.1f}ms  coll {t['collective_s']*1e3:9.1f}ms"
+            f"  bound {t['bound_s']*1e3:9.1f}ms ({t['dominant']:>10s})  "
+            f"roofline {100*res['roofline_fraction']:6.2f}%  "
+            f"peak {res['memory']['peak_GiB']:7.1f}GiB")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="ABC")
+    args = ap.parse_args()
+    for cell in args.cell:
+        print(f"\n===== Cell {cell} =====")
+        prev_bound = None
+        for arch, shape, cli, env, suffix in ITERS[cell]:
+            res = run_iter(arch, shape, cli, env, suffix)
+            if res is None:
+                continue
+            delta = ""
+            bound = res["roofline"]["bound_s"]
+            if prev_bound:
+                delta = f"  [{prev_bound/bound:5.2f}x vs prev]"
+            prev_bound = bound
+            print(f"{suffix:18s} {fmt(res)}{delta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Async, atomic, mesh-agnostic checkpointing with elastic restore.
+
+Layout:  <dir>/step_<n>/arrays.npz  +  <dir>/step_<n>/MANIFEST.json
+Atomicity: writes go to ``step_<n>.tmp`` and are renamed only when complete,
+so a killed worker never leaves a half checkpoint that restore would pick up.
+Async: ``save`` returns immediately; a single writer thread drains a queue
+(back-pressure at depth 2 so checkpoints can't pile up unboundedly).
+Elastic: arrays are stored as full (host-global) numpy arrays keyed by
+pytree path; ``restore`` device_puts them under *whatever shardings the
+target pytree carries*, so a checkpoint taken on the (16,16) mesh restores
+onto (2,16,16) or a single CPU device unchanged (tested).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import ml_dtypes
+import numpy as np
+
+import jax
+
+# numpy's npz cannot serialise bfloat16/f8 natively: store a bit-view and
+# record the logical dtype in the manifest.
+_EXOTIC = {"bfloat16": (np.uint16, ml_dtypes.bfloat16),
+           "float8_e4m3fn": (np.uint8, ml_dtypes.float8_e4m3fn),
+           "float8_e5m2": (np.uint8, ml_dtypes.float8_e5m2)}
+
+
+def _flatten_with_paths(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat[key] = leaf
+    return flat
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: "queue.Queue" = queue.Queue(maxsize=2)
+        self._thread = threading.Thread(target=self._writer, daemon=True)
+        self._thread.start()
+        self._errors: List[BaseException] = []
+
+    # ---------------- writer thread ----------------
+    def _writer(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                step, flat, meta = item
+                self._write(step, flat, meta)
+            except BaseException as e:   # surfaced on next wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray], meta: dict):
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        meta = dict(meta, step=step, time=time.time())
+        with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def _gc(self):
+        steps = self.available()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # ---------------- public API ----------------
+    def save(self, step: int, tree, meta: Optional[dict] = None,
+             block: bool = False):
+        """Snapshot to host memory now, write in background."""
+        flat = {}
+        dtypes = {}
+        for k, v in _flatten_with_paths(tree).items():
+            a = np.asarray(v)
+            if str(a.dtype) in _EXOTIC:
+                dtypes[k] = str(a.dtype)
+                a = a.view(_EXOTIC[str(a.dtype)][0])
+            flat[k] = a
+        self._q.put((step, flat, dict(meta or {}, dtypes=dtypes)))
+        if block:
+            self.wait()
+
+    def wait(self):
+        """Block until all queued checkpoints are durable on disk."""
+        self._q.join()
+        if self._errors:
+            raise self._errors[-1]
+
+    def available(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name[5:]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest(self) -> Optional[int]:
+        steps = [s for s in self.available() if s >= 0]
+        return steps[-1] if steps else None
+
+    def restore(self, target, step: Optional[int] = None):
+        """Restore into the structure/shardings of ``target`` (abstract or
+        concrete pytree).  Returns (step, pytree)."""
+        step = step if step is not None else self.latest()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        base = os.path.join(self.dir, f"step_{step:08d}")
+        data = np.load(os.path.join(base, "arrays.npz"))
+        with open(os.path.join(base, "MANIFEST.json")) as f:
+            manifest = json.load(f)
+        dtypes = manifest.get("dtypes", {})
+        flat_target = _flatten_with_paths(target)
+        out = {}
+        for key, tgt in flat_target.items():
+            arr = data[key]
+            if key in dtypes:
+                arr = arr.view(_EXOTIC[dtypes[key]][1])
+            sharding = getattr(tgt, "sharding", None)
+            if sharding is not None and hasattr(sharding, "mesh"):
+                out[key] = jax.device_put(arr, sharding)
+            else:
+                out[key] = jax.device_put(arr.astype(tgt.dtype))
+        leaves_paths = jax.tree_util.tree_flatten_with_path(target)
+        keys_in_order = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                  for p in path_)
+                         for path_, _ in leaves_paths[0]]
+        restored = jax.tree_util.tree_unflatten(
+            leaves_paths[1], [out[k] for k in keys_in_order])
+        return step, restored
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=5)

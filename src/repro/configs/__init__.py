@@ -1,0 +1,102 @@
+"""Architecture registry + input-shape grid (the assignment's 40 cells).
+
+``--arch <id>`` resolution, reduced smoke configs, and per-arch shape
+applicability (encoder-only archs have no decode; long_500k only runs on
+sub-quadratic archs) live here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.common import ModelConfig
+
+from repro.configs import (llama4_maverick_400b_a17b, mixtral_8x7b,
+                           llama3_405b, granite_20b, codeqwen1_5_7b,
+                           command_r_35b, phi_3_vision_4_2b, xlstm_1_3b,
+                           hymba_1_5b, hubert_xlarge)
+
+ARCHS: Dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG for m in (
+        llama4_maverick_400b_a17b, mixtral_8x7b, llama3_405b, granite_20b,
+        codeqwen1_5_7b, command_r_35b, phi_3_vision_4_2b, xlstm_1_3b,
+        hymba_1_5b, hubert_xlarge)
+}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str           # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeCfg] = {
+    "train_4k": ShapeCfg("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCfg("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCfg("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCfg("long_500k", 524288, 1, "decode"),
+}
+
+# archs with sub-quadratic sequence mixing (SWA window / recurrent state):
+SUBQUADRATIC = {"mixtral-8x7b", "xlstm-1.3b", "hymba-1.5b"}
+
+
+def shape_applicability(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runs?, reason-if-skipped) for one of the 40 assignment cells."""
+    cfg = get_config(arch)
+    if cfg.family == "encoder":
+        if shape in ("decode_32k", "long_500k"):
+            return False, "encoder-only arch: no decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, ("pure full-attention arch: 512k decode needs "
+                       "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def all_cells() -> List[Tuple[str, str, bool, str]]:
+    out = []
+    for a in ARCHS:
+        for s in SHAPES:
+            ok, why = shape_applicability(a, s)
+            out.append((a, s, ok, why))
+    return out
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (per assignment)."""
+    heads = 4 if cfg.n_heads >= 4 else cfg.n_heads
+    kv = max(1, min(cfg.n_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        cfg,
+        name=cfg.name + "-smoke",
+        n_layers=2 if cfg.family != "ssm" else 3,
+        d_model=64,
+        n_heads=heads,
+        n_kv_heads=kv,
+        head_dim=16,
+        d_ff=0 if cfg.d_ff == 0 else 128,
+        vocab=128,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        # drop-free routing in smoke tests so prefill/decode equivalence is
+        # exact; production configs keep capacity_factor 1.25 (drops are
+        # covered by the dedicated MoE unit tests)
+        capacity_factor=8.0,
+        window=16 if cfg.window else 0,
+        n_slstm=1 if cfg.n_slstm else 0,
+        n_frontend_tokens=8 if cfg.n_frontend_tokens else 0,
+        ssm_chunk=8,
+        attn_block_q=16,
+        attn_block_kv=16,
+        vocab_pad_multiple=16,
+        dtype="float32",
+    )

@@ -1,0 +1,10 @@
+"""codeqwen1.5-7b [dense] — qwen1.5-arch (MHA, qkv bias).
+[hf:Qwen/CodeQwen1.5-7B; hf]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=13440, vocab=92416, qkv_bias=True, tp_strategy="head",
+    rope_theta=1e6, source="hf:Qwen/CodeQwen1.5-7B; hf",
+)

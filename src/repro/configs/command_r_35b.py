@@ -1,0 +1,12 @@
+"""command-r-35b [dense] — GQA, no-bias, 256k vocab.
+[hf:CohereForAI/c4ai-command-r-v01; unverified]
+The 256k vocab makes the unembed/CE the memory hot-spot -> chunked-CE
+hillclimb target (§Perf)."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-35b", family="dense",
+    n_layers=40, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22528, vocab=256000, tp_strategy="head", rope_theta=4e6,
+    source="hf:CohereForAI/c4ai-command-r-v01; unverified",
+)

@@ -1,0 +1,10 @@
+"""granite-20b [dense] — llama-arch, code; MQA (kv=1).
+[arXiv:2405.04324; hf]   kv=1 < TP: KV projections replicated across TP."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-20b", family="dense",
+    n_layers=52, d_model=6144, n_heads=48, n_kv_heads=1, head_dim=128,
+    d_ff=24576, vocab=49152, tp_strategy="head", rope_theta=1e4,
+    source="arXiv:2405.04324; hf",
+)

@@ -1,0 +1,12 @@
+"""hubert-xlarge [audio] — encoder-only transformer backbone (w2v2 arch).
+[arXiv:2106.07447; unverified]
+Frame frontend is a STUB: input_specs() provides precomputed frame
+embeddings [B, S, d_model].  Encoder-only: decode shapes skipped."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="encoder",
+    n_layers=48, d_model=1280, n_heads=16, n_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab=504, causal=False, tp_strategy="head",
+    frontend="frames", source="arXiv:2106.07447; unverified",
+)

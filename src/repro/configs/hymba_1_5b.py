@@ -1,0 +1,12 @@
+"""hymba-1.5b [hybrid] — parallel attention + Mamba-2/SSD heads per block.
+[arXiv:2411.13676; hf]
+25 heads % 16 != 0 -> feature-dim TP + seq-parallel attention.  SWA(1024)
+on the attention branch + SSD state -> long_500k runs."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hymba-1.5b", family="hybrid",
+    n_layers=32, d_model=1600, n_heads=25, n_kv_heads=5, head_dim=64,
+    d_ff=5504, vocab=32001, ssm_state=16, d_inner_mult=2, window=1024,
+    tp_strategy="feature", source="arXiv:2411.13676; hf",
+)

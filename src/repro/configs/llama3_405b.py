@@ -1,0 +1,9 @@
+"""llama3-405b [dense] — GQA, 128k vocab. [arXiv:2407.21783; unverified]"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3-405b", family="dense",
+    n_layers=126, d_model=16384, n_heads=128, n_kv_heads=8, head_dim=128,
+    d_ff=53248, vocab=128256, tp_strategy="head", rope_theta=5e5,
+    source="arXiv:2407.21783; unverified",
+)

@@ -1,0 +1,15 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion.
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+
+40 heads % 16 TP != 0 -> feature-dim TP + sequence-parallel attention.
+Full-attention arch: long_500k skipped (see DESIGN.md §Arch-applicability).
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab=202048, n_experts=128, experts_per_token=1,
+    tp_strategy="feature", rope_theta=5e5,
+    source="hf:meta-llama/Llama-4-Scout-17B-16E; unverified",
+)

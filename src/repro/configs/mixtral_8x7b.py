@@ -1,0 +1,11 @@
+"""mixtral-8x7b [moe] — 8 experts top-2, sliding-window attention.
+[arXiv:2401.04088; hf]   SWA(4096) makes long_500k decode tractable."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=32000, n_experts=8, experts_per_token=2,
+    window=4096, tp_strategy="head", rope_theta=1e6,
+    source="arXiv:2401.04088; hf",
+)

@@ -1,0 +1,13 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (STUB).
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+input_specs() provides 576 precomputed patch embeddings per sample; the
+CLIP tower itself is out of scope per the assignment."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b", family="vlm",
+    n_layers=32, d_model=3072, n_heads=32, n_kv_heads=32, head_dim=96,
+    d_ff=8192, vocab=32064, tp_strategy="head", rope_theta=1e4,
+    frontend="patch", n_frontend_tokens=576,
+    source="hf:microsoft/Phi-3-vision-128k-instruct; hf",
+)

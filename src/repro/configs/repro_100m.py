@@ -1,0 +1,14 @@
+"""repro-100m — the framework's own end-to-end driver config (~120M params).
+
+Not part of the assigned 10-arch pool; used by examples/train_e2e.py to
+train a real model for a few hundred steps on whatever devices exist.
+"""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="repro-100m", family="dense",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=4, head_dim=64,
+    d_ff=2048, vocab=32000, tp_strategy="head", rope_theta=1e4,
+    dtype="float32", remat=False, attn_block_q=64, attn_block_kv=64,
+    source="this repo",
+)

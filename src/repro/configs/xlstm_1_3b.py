@@ -1,0 +1,12 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks (xLSTM[7:1] -> 42 mLSTM + 6 sLSTM).
+[arXiv:2405.04517; unverified]
+d_ff=0: xLSTM blocks carry their own up-projection (d_inner = 2·d_model).
+4 heads % 16 != 0 -> feature-dim TP. Recurrent state -> long_500k runs."""
+from repro.models.common import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4, head_dim=512,
+    d_ff=0, vocab=50304, n_slstm=6, d_inner_mult=2,
+    tp_strategy="feature", source="arXiv:2405.04517; unverified",
+)

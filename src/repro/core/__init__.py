@@ -1,0 +1,41 @@
+"""RegionPoint — BarrierPoint-style representative-region sampling for JAX.
+
+The paper's primary contribution as a composable library:
+
+    regions      Region / RegionStream / Workload protocol
+    signatures   Signature Vectors (PV = BBV analogue, RDV = LDV analogue)
+    reuse        LRU stack distances (oracle + O(N²) masked form)
+    cluster      SimPoint-style k-means + BIC (JAX, jit-able)
+    select       representative selection, multipliers, 10-run discovery
+    reconstruct  weighted reconstruction + validation errors
+    crossarch    the full §V-A workflow across architectures/variants
+    coalesce     beyond-paper: tiny-region coalescing + single-region split
+"""
+from repro.core.regions import Region, RegionStream, Workload
+from repro.core.signatures import (region_signature, primitive_vector,
+                                   primitive_weights, access_stream,
+                                   signature_from_histogram)
+from repro.core.reuse import (lru_stack_distances_oracle,
+                              stack_distances_masked, reuse_histogram)
+from repro.core.cluster import kmeans, choose_k, bic_score, Clustering
+from repro.core.select import (select_regions, discover_sets, RegionSet,
+                               drop_insignificant)
+from repro.core.reconstruct import (estimate_totals, reconstruction_errors,
+                                    evaluate_set, best_set, SetReport)
+from repro.core.crossarch import (run_workflow, cross_variant_report,
+                                  check_alignment, VariantReport, METRICS,
+                                  extract_signatures, collect_stream_counters)
+from repro.core.coalesce import coalesce_stream, split_stream
+
+__all__ = [
+    "Region", "RegionStream", "Workload",
+    "region_signature", "primitive_vector", "primitive_weights",
+    "access_stream", "signature_from_histogram",
+    "lru_stack_distances_oracle", "stack_distances_masked", "reuse_histogram",
+    "kmeans", "choose_k", "bic_score", "Clustering",
+    "select_regions", "discover_sets", "RegionSet", "drop_insignificant",
+    "estimate_totals", "reconstruction_errors", "evaluate_set", "best_set",
+    "SetReport", "run_workflow", "cross_variant_report", "check_alignment",
+    "VariantReport", "METRICS", "extract_signatures",
+    "collect_stream_counters", "coalesce_stream", "split_stream",
+]

@@ -1,0 +1,126 @@
+"""SimPoint-3.2-style clustering: k-means (k-means++ init) + BIC selection.
+
+The paper feeds Signature Vectors to SimPoint 3.2 (k-means, maxK=20,
+BIC-based k selection) and follows the original BarrierPoint parameters
+(§V-A step 2).  This is a JAX implementation of the same semantics:
+
+  - Lloyd iterations run under ``jax.lax`` control flow (jit-able);
+  - k is chosen per SimPoint's rule: smallest k whose BIC reaches >= 90 % of
+    the BIC range over k in 1..maxK;
+  - empty clusters keep their previous centroid (SimPoint behaviour).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("k", "iters"))
+def _kmeans_fit(x: jnp.ndarray, key: jnp.ndarray, k: int,
+                iters: int = 50) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """k-means++ init + Lloyd. Returns (centers, assign, sse)."""
+    n, d = x.shape
+
+    # --- k-means++ seeding (sequential over k; k is static & small) ---
+    key, sub = jax.random.split(key)
+    first = jax.random.randint(sub, (), 0, n)
+    centers0 = jnp.zeros((k, d), x.dtype).at[0].set(x[first])
+
+    def seed_step(carry, i):
+        centers, key = carry
+        d2 = jnp.min(
+            jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+            + jnp.where(jnp.arange(k)[None, :] < i, 0.0, jnp.inf), axis=1)
+        key, sub = jax.random.split(key)
+        p = d2 / jnp.maximum(d2.sum(), 1e-30)
+        idx = jax.random.choice(sub, n, p=p)
+        centers = centers.at[i].set(x[idx])
+        return (centers, key), None
+
+    (centers, key), _ = jax.lax.scan(seed_step, (centers0, key),
+                                     jnp.arange(1, k))
+
+    # --- Lloyd iterations ---
+    def lloyd(centers, _):
+        d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+        assign = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(assign, k, dtype=x.dtype)
+        counts = onehot.sum(0)
+        sums = onehot.T @ x
+        new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None],
+                        centers)
+        return new, None
+
+    centers, _ = jax.lax.scan(lloyd, centers, None, length=iters)
+    d2 = jnp.sum((x[:, None, :] - centers[None, :, :]) ** 2, -1)
+    assign = jnp.argmin(d2, axis=1)
+    sse = jnp.sum(jnp.min(d2, axis=1))
+    return centers, assign, sse
+
+
+def kmeans(x: np.ndarray, k: int, seed: int = 0, restarts: int = 3,
+           iters: int = 50) -> Tuple[np.ndarray, np.ndarray, float]:
+    """Best-of-``restarts`` k-means."""
+    x = jnp.asarray(x, jnp.float32)
+    best = None
+    for r in range(restarts):
+        key = jax.random.PRNGKey(seed * 9973 + r)
+        c, a, sse = _kmeans_fit(x, key, k, iters)
+        sse = float(sse)
+        if best is None or sse < best[2]:
+            best = (np.asarray(c), np.asarray(a), sse)
+    return best
+
+
+def bic_score(x: np.ndarray, centers: np.ndarray, assign: np.ndarray,
+              sse: float) -> float:
+    """x-means/SimPoint BIC of a spherical-Gaussian clustering."""
+    n, d = x.shape
+    k = centers.shape[0]
+    if n <= k:
+        return -np.inf
+    sigma2 = max(sse / (d * max(n - k, 1)), 1e-12)
+    counts = np.bincount(assign, minlength=k).astype(np.float64)
+    nz = counts > 0
+    loglik = float(np.sum(counts[nz] * np.log(counts[nz] / n))) \
+        - 0.5 * n * d * np.log(2 * np.pi * sigma2) \
+        - 0.5 * d * (n - k)
+    p = k * (d + 1)
+    return loglik - 0.5 * p * np.log(n)
+
+
+@dataclasses.dataclass
+class Clustering:
+    k: int
+    centers: np.ndarray
+    assign: np.ndarray
+    sse: float
+    bic: float
+    bics: dict     # k -> bic over the sweep
+
+
+def choose_k(x: np.ndarray, max_k: int = 20, seed: int = 0,
+             bic_frac: float = 0.9, restarts: int = 3) -> Clustering:
+    """SimPoint's k selection: smallest k with BIC >= min + frac·(max-min)."""
+    n = x.shape[0]
+    max_k = int(min(max_k, n))
+    results = {}
+    for k in range(1, max_k + 1):
+        c, a, sse = kmeans(x, k, seed=seed, restarts=restarts)
+        results[k] = (c, a, sse, bic_score(x, c, a, sse))
+    bics = {k: r[3] for k, r in results.items()}
+    finite = {k: b for k, b in bics.items() if np.isfinite(b)}
+    if not finite:
+        k = 1
+    else:
+        lo, hi = min(finite.values()), max(finite.values())
+        thresh = lo + bic_frac * (hi - lo)
+        k = min(kk for kk, b in finite.items() if b >= thresh)
+    c, a, sse, b = results[k]
+    return Clustering(k=k, centers=c, assign=a, sse=sse, bic=b, bics=bics)

@@ -1,0 +1,209 @@
+"""The cross-architectural workflow (paper §V-A, steps 1–5, end to end).
+
+Workflow per (workload × width × variant):
+  1. *Instrumentation*: the workload builds its RegionStream (regions are
+     structural — step/iteration boundaries — so there is nothing manual to
+     insert; see DESIGN.md).
+  2. *Discovery & clustering* on *architecture A*'s signatures: 10 runs with
+     interleaving jitter -> 10 candidate barrier-point sets.
+  3. *Statistic collection*: per-region counters on every architecture
+     (measured wall on the host CPU; modeled TPU-v5e / TPU-v4 counters from
+     the region's compiled HLO).
+  4. *Reconstruction* of full-workload counters from representatives.
+  5. *Validation* against the full-run ground truth, per architecture.
+
+Architectures ("ISA" axis)   : cpu_host (measured), tpu_v5e, tpu_v4 (modeled)
+Vectorisation axis           : variant f32 ("non-vect") vs bf16 ("vect")
+Counter mapping (PMU analogue):
+    cycles        <- wall_ns (cpu_host) | <hw>_time_s (modeled)
+    instructions  <- hlo_flops
+    l1d_bytes     <- vmem_bytes
+    l2d_bytes     <- hbm_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.regions import Region, RegionStream, Workload
+from repro.core.select import discover_sets, RegionSet
+from repro.core.reconstruct import SetReport, evaluate_set, best_set
+from repro.core.signatures import region_signature
+from repro.instrument.counters import CounterBank, collect_counters
+from repro.instrument.hwmodel import TPU_V5E, TPU_V4
+
+METRICS = ("cycles", "instructions", "l1d_bytes", "l2d_bytes")
+DEFAULT_ARCHS = ("cpu_host", "tpu_v5e", "tpu_v4")
+
+_CYCLES_SOURCE = {
+    "cpu_host": "wall_ns",
+    "tpu_v5e": "tpu_v5e_time_s",
+    "tpu_v4": "tpu_v4_time_s",
+}
+
+
+def _arg_key(args) -> Tuple:
+    key = []
+    for a in args:
+        shape = getattr(a, "shape", None)
+        dtype = getattr(a, "dtype", None)
+        key.append((str(shape), str(dtype)))
+    return tuple(key)
+
+
+def extract_signatures(stream: RegionStream) -> None:
+    """Step 2 input: Signature Vector per region (cached by trace shape)."""
+    cache: Dict = {}
+    for r in stream.regions:
+        if r.signature is not None or r.fn is None:
+            continue
+        key = (r.name, id(r.fn), _arg_key(r.args),
+               None if r.addresses is None else
+               (len(r.addresses), int(np.sum(r.addresses[:64])) if len(r.addresses) else 0))
+        if key not in cache:
+            cache[key] = region_signature(r.fn, r.args, addresses=r.addresses)
+        r.signature = cache[key]
+
+
+def collect_stream_counters(stream: RegionStream, *, reps: int = 20,
+                            measure: bool = True,
+                            archs: Sequence[str] = DEFAULT_ARCHS) -> None:
+    """Step 3: per-region counters on every architecture.
+
+    Compilation/HLO analysis is cached by (fn, arg-shapes): identical regions
+    have identical modeled counters (a cycle-accurate simulator would agree),
+    while measured wall-clock is re-sampled per region — real hardware noise,
+    the paper's variability source (§V-C).
+    """
+    from repro.instrument.counters import measure_wall  # local: keeps import light
+    import jax
+
+    hlo_cache: Dict = {}
+    jit_cache: Dict = {}
+    for r in stream.regions:
+        if r.fn is None or r.counters:
+            continue
+        key = (id(r.fn), _arg_key(r.args))
+        if key not in hlo_cache:
+            bank = collect_counters(r.fn, r.args, reps=max(2, reps // 4),
+                                    hw_models=(TPU_V5E, TPU_V4),
+                                    measure=False,
+                                    dtype="bf16" if stream.variant == "bf16" else "f32")
+            hlo_cache[key] = bank
+            jit_cache[key] = jax.jit(r.fn)
+        base: CounterBank = hlo_cache[key]
+        wall_samples: List[float] = []
+        if measure and "cpu_host" in archs:
+            wall_samples = measure_wall(jit_cache[key], r.args,
+                                        reps=reps, warmup=1)
+        for arch in archs:
+            values = {
+                "instructions": base.values["hlo_flops"],
+                "l1d_bytes": base.values["vmem_bytes"],
+                "l2d_bytes": base.values["hbm_bytes"],
+            }
+            samples = {}
+            if arch == "cpu_host":
+                if wall_samples:
+                    values["cycles"] = float(np.mean(wall_samples))
+                    samples["cycles"] = wall_samples
+                else:  # fall back to modeled when measurement disabled
+                    values["cycles"] = base.values["tpu_v5e_time_s"]
+            else:
+                values["cycles"] = base.values[_CYCLES_SOURCE[arch]]
+            r.counters[arch] = CounterBank(values=values, samples=samples)
+        r.weight = base.values["hlo_flops"]
+
+
+@dataclasses.dataclass
+class VariantReport:
+    workload: str
+    width: int
+    variant: str
+    n_regions: int
+    applicable: bool
+    note: str
+    sets: List[SetReport]
+    best: Optional[SetReport]
+
+    def summary_row(self) -> dict:
+        row = {
+            "workload": self.workload, "width": self.width,
+            "variant": self.variant, "n_regions": self.n_regions,
+            "applicable": self.applicable, "note": self.note,
+        }
+        if self.best is not None:
+            row.update({
+                "k": self.best.k,
+                "frac_selected": self.best.frac_selected,
+                "largest_frac": self.best.largest_frac,
+                "speedup_total": self.best.speedup_total,
+                "speedup_parallel": self.best.speedup_parallel,
+            })
+            for arch, errs in self.best.errors.items():
+                for m, e in errs.items():
+                    row[f"err_{arch}_{m}"] = e
+        return row
+
+
+def run_workflow(workload: Workload, width: int, variant: str, *,
+                 archs: Sequence[str] = DEFAULT_ARCHS,
+                 n_discovery: int = 10, reps: int = 20, max_k: int = 20,
+                 jitter: float = 0.02, measure: bool = True,
+                 restarts: int = 3,
+                 stream: Optional[RegionStream] = None) -> Tuple[RegionStream, VariantReport]:
+    """Full §V-A workflow for one configuration; returns stream + report."""
+    if stream is None:
+        stream = workload.build_stream(width, variant)
+    extract_signatures(stream)
+    collect_stream_counters(stream, reps=reps, measure=measure, archs=archs)
+
+    note = ""
+    if len(stream) <= 1:
+        note = ("single parallel region: representative by definition, "
+                "no simulation-time gain (paper §V-B)")
+    sets = discover_sets(stream.signatures(), n_runs=n_discovery,
+                         jitter=jitter, max_k=max_k, restarts=restarts)
+    reports = [evaluate_set(stream, s, archs, METRICS) for s in sets]
+    bst = best_set(reports)
+    return stream, VariantReport(
+        workload=stream.workload, width=width, variant=variant,
+        n_regions=len(stream), applicable=True, note=note,
+        sets=reports, best=bst)
+
+
+def check_alignment(stream_a: RegionStream, stream_b: RegionStream
+                    ) -> Tuple[bool, str]:
+    """§V-B: if the region count is architecture/variant-dependent (HPGMG's
+    convergence-rate case), the streams don't align and representatives from
+    A cannot be mapped onto B."""
+    if len(stream_a) != len(stream_b):
+        return False, (
+            f"region streams misaligned: {stream_a.variant}:{len(stream_a)} vs "
+            f"{stream_b.variant}:{len(stream_b)} regions "
+            "(architecture-dependent convergence, methodology inapplicable)")
+    return True, ""
+
+
+def cross_variant_report(workload: Workload, width: int, *,
+                         variants: Sequence[str] = ("f32", "bf16"),
+                         **kw) -> Dict[str, VariantReport]:
+    """Run the workflow for every variant and apply the alignment check.
+
+    Mirrors the paper's four predictions: selections made per variant are
+    validated on every architecture for that variant (x86→x86, x86→ARM,
+    x86-vect→x86-vect, x86-vect→ARM-vect).
+    """
+    out: Dict[str, VariantReport] = {}
+    streams: Dict[str, RegionStream] = {}
+    for v in variants:
+        streams[v], out[v] = run_workflow(workload, width, v, **kw)
+    if len(variants) == 2:
+        ok, note = check_alignment(streams[variants[0]], streams[variants[1]])
+        if not ok:
+            for v in variants:
+                out[v].applicable = False
+                out[v].note = note
+    return out

@@ -1,0 +1,88 @@
+"""Program-behaviour reconstruction + validation (paper §V-A steps 4–5).
+
+estimate  = Σ_clusters multiplier_c × counters(representative_c)
+truth     = Σ_regions counters(region)          (the uninstrumented full run)
+error     = |estimate − truth| / truth          (per metric, per architecture)
+
+Validation succeeds when every metric's error is below the tolerance the
+paper uses for "reasonable" (5 %); the headline numbers (cycles,
+instructions) are expected below 2.3 %.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.core.regions import RegionStream
+from repro.core.select import RegionSet
+
+
+def estimate_totals(stream: RegionStream, rset: RegionSet, arch: str,
+                    metrics: Sequence[str]) -> Dict[str, float]:
+    out = {m: 0.0 for m in metrics}
+    for rep, mult in zip(rset.rep_indices, rset.multipliers):
+        r = stream.regions[int(rep)]
+        for m in metrics:
+            out[m] += mult * r.counter(arch, m)
+    return out
+
+
+def reconstruction_errors(stream: RegionStream, rset: RegionSet, arch: str,
+                          metrics: Sequence[str]) -> Dict[str, float]:
+    est = estimate_totals(stream, rset, arch, metrics)
+    true = stream.totals(arch, metrics)
+    errs = {}
+    for m in metrics:
+        t = true[m]
+        errs[m] = abs(est[m] - t) / abs(t) if t else 0.0
+    return errs
+
+
+@dataclasses.dataclass
+class SetReport:
+    """Everything Table IV reports for one barrier-point set."""
+
+    seed: int
+    k: int
+    n_regions: int
+    errors: Dict[str, Dict[str, float]]    # arch -> metric -> rel. error
+    frac_selected: float                   # 'Instructions Selected: Total %'
+    largest_frac: float                    # 'Largest BP %'
+    speedup_total: float                   # 1 / frac_selected
+    speedup_parallel: float                # 1 / largest_frac
+
+    def max_error(self, metrics: Sequence[str] = ("cycles", "instructions")
+                  ) -> float:
+        worst = 0.0
+        for per_arch in self.errors.values():
+            for m in metrics:
+                if m in per_arch:
+                    worst = max(worst, per_arch[m])
+        return worst
+
+
+def evaluate_set(stream: RegionStream, rset: RegionSet,
+                 archs: Sequence[str], metrics: Sequence[str],
+                 weight_metric: str = "instructions") -> SetReport:
+    errors = {a: reconstruction_errors(stream, rset, a, metrics)
+              for a in archs}
+    # weights for coverage: per-region work on the first arch
+    w = np.array([stream.regions[i].counter(archs[0], weight_metric)
+                  for i in range(len(stream))], dtype=np.float64)
+    frac = rset.coverage_fraction(w)
+    largest = rset.largest_fraction(w)
+    return SetReport(
+        seed=rset.seed, k=rset.k, n_regions=len(stream), errors=errors,
+        frac_selected=frac, largest_frac=largest,
+        speedup_total=1.0 / max(frac, 1e-12),
+        speedup_parallel=1.0 / max(largest, 1e-12),
+    )
+
+
+def best_set(reports: List[SetReport],
+             metrics: Sequence[str] = ("cycles", "instructions")) -> SetReport:
+    """The paper reports the set with the lowest error across the metrics of
+    interest (Fig. 2 caption)."""
+    return min(reports, key=lambda r: r.max_error(metrics))

@@ -1,0 +1,90 @@
+"""Region model: the barrier-point analogue for JAX programs.
+
+A **Region** is a synchronisation-delimited unit of work (paper: an
+inter-barrier OpenMP region).  In this framework a region owns:
+
+  - a callable + concrete args (so it can be traced for its signature and
+    measured/compiled for its counters) — the paper's "code between barriers";
+  - an optional concrete *address stream* (e.g. gather indices actually
+    executed) for data-dependent locality, the LDV's runtime information;
+  - per-architecture CounterBanks once step 3 of the workflow has run.
+
+A **RegionStream** is the ordered sequence of regions of one workload
+configuration (one app × width × variant), the unit the methodology operates
+on.  Streams are what get clustered, sampled and reconstructed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.instrument.counters import CounterBank
+
+
+@dataclasses.dataclass
+class Region:
+    index: int
+    name: str
+    fn: Optional[Callable] = None
+    args: Tuple = ()
+    # optional concrete address stream (ints) for data-dependent reuse:
+    addresses: Optional[np.ndarray] = None
+    signature: Optional[np.ndarray] = None
+    counters: Dict[str, CounterBank] = dataclasses.field(default_factory=dict)
+    weight: float = 1.0     # size proxy (flops); filled after counter collection
+    merged_from: Tuple[int, ...] = ()   # set by coalescing
+
+    def counter(self, arch: str, metric: str) -> float:
+        return self.counters[arch].values[metric]
+
+
+@dataclasses.dataclass
+class RegionStream:
+    workload: str
+    width: int                      # decomposition width (thread-count analogue)
+    variant: str                    # "f32" (non-vectorised) | "bf16" (vectorised)
+    regions: List[Region] = dataclasses.field(default_factory=list)
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.regions)
+
+    def signatures(self) -> np.ndarray:
+        sigs = [r.signature for r in self.regions]
+        if any(s is None for s in sigs):
+            raise ValueError(f"stream {self.workload}: signatures not extracted")
+        return np.stack(sigs).astype(np.float64)
+
+    def totals(self, arch: str, metrics: Sequence[str]) -> Dict[str, float]:
+        """Ground-truth full-workload counters (paper: uninstrumented run)."""
+        out = {m: 0.0 for m in metrics}
+        for r in self.regions:
+            for m in metrics:
+                out[m] += r.counter(arch, m)
+        return out
+
+    def weights(self) -> np.ndarray:
+        return np.array([r.weight for r in self.regions], dtype=np.float64)
+
+
+class Workload:
+    """Protocol for apps the methodology applies to (hpcproxy + LM drivers).
+
+    ``build_stream`` must return the full ordered region stream for a given
+    decomposition width and dtype variant.  Iteration counts are allowed to
+    depend on the variant (HPGMG-style convergence) — crossarch detects the
+    misalignment and reports the methodology inapplicable, as in §V-B.
+    """
+
+    name: str = "workload"
+    widths: Tuple[int, ...] = (1, 2, 4, 8)
+
+    def build_stream(self, width: int, variant: str) -> RegionStream:
+        raise NotImplementedError
+
+    def split_hint(self) -> int:
+        """For single-region apps: how many chunks a region can split into
+        (beyond-paper XSBench fix); 0 = not splittable."""
+        return 0

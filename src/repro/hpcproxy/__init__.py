@@ -1,0 +1,31 @@
+"""The paper's Table-I HPC proxy suite, in JAX (see DESIGN.md §3)."""
+from repro.hpcproxy.solvers import AMGMk, HPCG, MiniFE, HPGMG
+from repro.hpcproxy.irregular import (CoMD, Graph500, MCB, LULESH, XSBench,
+                                      RSBench, PathFinder)
+
+
+def suite():
+    """Fresh instances of all eleven Table-I applications."""
+    return {
+        "AMGMk": AMGMk(),
+        "CoMD": CoMD(),
+        "graph500": Graph500(),
+        "HPCG": HPCG(),
+        "HPGMG-FV": HPGMG(),
+        "LULESH": LULESH(),
+        "MCB": MCB(),
+        "miniFE": MiniFE(),
+        "XSBench": XSBench(),
+        "RSBench": RSBench(),
+        "PathFinder": PathFinder(),
+    }
+
+
+# the apps the paper could evaluate end-to-end (Table IV)
+EVALUATED = ("AMGMk", "CoMD", "graph500", "HPCG", "LULESH", "MCB", "miniFE")
+# single-region apps (method valid, no gain — §V-B)
+SINGLE_REGION = ("XSBench", "RSBench", "PathFinder")
+
+__all__ = ["suite", "EVALUATED", "SINGLE_REGION", "AMGMk", "CoMD",
+           "Graph500", "HPCG", "HPGMG", "LULESH", "MCB", "MiniFE",
+           "XSBench", "RSBench", "PathFinder"]

@@ -1,0 +1,52 @@
+"""Shared substrate for the paper's Table-I proxy applications in JAX.
+
+Every app is a :class:`repro.core.regions.Workload` whose ``build_stream``
+returns the ordered barrier-region stream for a (width, variant) config:
+
+  width    decomposition width W ∈ {1,2,4,8} — the thread-count analogue
+           (data layout is blocked [W, n/W], so the traced program and its
+           signatures change with W exactly as OpenMP barrier structure
+           changes with thread count);
+  variant  "f32" (non-vectorised) or "bf16" (vectorised / MXU-engaging).
+
+Problem sizes are chosen so regions do useful work relative to dispatch
+overhead on this host (the paper sizes for L2-exceeding footprints; we keep
+the same spirit scaled to a 1-core container) — except LULESH, whose *tiny*
+regions are the point (§V-C failure mode).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core.regions import Region, RegionStream, Workload
+
+
+def vdtype(variant: str):
+    return jnp.bfloat16 if variant == "bf16" else jnp.float32
+
+
+def as_v(x: np.ndarray, variant: str):
+    return jnp.asarray(x, vdtype(variant))
+
+
+def region(idx: int, name: str, fn: Callable, args: Sequence,
+           addresses: Optional[np.ndarray] = None) -> Region:
+    return Region(index=idx, name=name, fn=fn, args=tuple(args),
+                  addresses=addresses)
+
+
+def stream(workload: str, width: int, variant: str, regions,
+           **meta) -> RegionStream:
+    return RegionStream(workload=workload, width=width, variant=variant,
+                        regions=list(regions), meta=dict(meta))
+
+
+def blocked(x: np.ndarray, width: int) -> np.ndarray:
+    """[n, ...] -> [W, n/W, ...] thread-decomposition layout."""
+    n = x.shape[0]
+    assert n % width == 0, (n, width)
+    return x.reshape((width, n // width) + x.shape[1:])

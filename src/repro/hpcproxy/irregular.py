@@ -1,0 +1,290 @@
+"""CoMD, graph500, MCB, LULESH, XSBench/RSBench/PathFinder — the irregular
+and failure-mode proxies.
+
+  CoMD      810 regions (405 MD steps × force/integrate); neighbour-list
+            gathers supply a real data-dependent address stream (RDVa) —
+            the app whose L1 measurements were noisy on ARM in the paper.
+  graph500  1 generation region (~40 % of instructions, always selected,
+            caps speed-up at ~2.6x — Table IV) + per-level BFS regions whose
+            frontier sizes come from an actual BFS (networkx) — 197-ish
+            regions with genuinely data-dependent shapes and addresses.
+  MCB       10 regions whose particle population *grows* per iteration
+            (splitting), reproducing Fig. 1's behaviour drift; set choice
+            matters (Set 1 vs Set 2 error gap).
+  LULESH    ~9840 *tiny* regions (410 steps × 24 micro-phases) — the
+            instrumentation-overhead / variability failure mode; iteration
+            count is width-dependent (9800 at W=1 vs 9840 at W>1, §V-B).
+  XSBench   a single embarrassingly-parallel lookup region — valid but no
+            speed-up (§V-B); ``split_hint`` enables the beyond-paper fix.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import Workload
+from repro.hpcproxy.common import as_v, blocked, region, stream, vdtype
+
+
+class CoMD(Workload):
+    """Lennard-Jones MD with static neighbour lists."""
+
+    name = "CoMD"
+
+    def __init__(self, n_atoms: int = 8192, neighbours: int = 32,
+                 steps: int = 405):
+        self.n, self.k, self.steps = n_atoms, neighbours, steps
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(23)
+        pos = rng.standard_normal((self.n, 3)).astype(np.float32) * 10
+        vel = rng.standard_normal((self.n, 3)).astype(np.float32)
+        nbr = rng.integers(0, self.n, size=(self.n, self.k)).astype(np.int32)
+        pv, vv = as_v(blocked(pos, width), variant), \
+            as_v(blocked(vel, width), variant)
+        nb = jnp.asarray(blocked(nbr, width))
+
+        def force(pos, nbr):
+            pj = pos.reshape(-1, 3)[nbr.reshape(-1, self.k)]   # gather
+            pj = pj.reshape(pos.shape[:-1] + (self.k, 3))
+            d = pos[..., None, :] - pj
+            r2 = jnp.sum(d * d, -1) + 0.5
+            inv6 = (1.0 / r2) ** 3
+            f = (24.0 * inv6 * (2.0 * inv6 - 1.0) / r2)[..., None] * d
+            return f.sum(-2).astype(pos.dtype)
+
+        def integrate(pos, vel, f):
+            v = vel + 0.01 * f
+            return (pos + 0.01 * v).astype(pos.dtype), v.astype(vel.dtype)
+
+        jforce, jint = jax.jit(force), jax.jit(integrate)
+        f0 = jforce(pv, nb)
+        addr = nbr.reshape(-1)[: 8192].astype(np.int64)
+        regions = []
+        i = 0
+        for _ in range(self.steps):
+            regions.append(region(i, "force", jforce, (pv, nb),
+                                  addresses=addr)); i += 1
+            regions.append(region(i, "integrate", jint, (pv, vv, f0))); i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class Graph500(Workload):
+    """Kronecker-style generation + BFS via frontier gathers."""
+
+    name = "graph500"
+
+    def __init__(self, scale: int = 13, degree: int = 16, roots: int = 16,
+                 target_regions: int = 197):
+        self.n = 1 << scale
+        self.degree, self.roots = degree, roots
+        self.target_regions = target_regions
+
+    def _graph(self):
+        rng = np.random.default_rng(31)
+        src = np.repeat(np.arange(self.n), self.degree)
+        # skewed (kronecker-ish) destination distribution
+        dst = (rng.pareto(1.3, size=src.shape) * self.n / 8).astype(np.int64) \
+            % self.n
+        return src.astype(np.int64), dst
+
+    def build_stream(self, width: int, variant: str):
+        import networkx as nx
+        src, dst = self._graph()
+        G = nx.Graph()
+        G.add_edges_from(zip(src.tolist(), dst.tolist()))
+
+        rng = np.random.default_rng(37)
+        seeds = rng.integers(0, self.n, size=self.roots * 16)
+        adj = np.full((self.n, self.degree), -1, np.int64)
+        deg = np.zeros(self.n, np.int64)
+        for s, d in zip(src, dst):
+            if deg[s] < self.degree:
+                adj[s, deg[s]] = d
+                deg[s] += 1
+        adj_j = jnp.asarray(np.maximum(adj, 0).astype(np.int32))
+
+        def generate(keys):
+            # edge generation: hashing + sort (30-40 % of total instructions)
+            x = keys.astype(jnp.uint32)
+            for _ in range(6):
+                x = (x * jnp.uint32(2654435761) + jnp.uint32(101)) \
+                    % jnp.uint32(1 << 30)
+                x = jnp.sort(x.reshape(width, -1), axis=-1).reshape(-1)
+            return x
+
+        def bfs_level(frontier, visited):
+            nxt = adj_j[frontier]                       # gather neighbours
+            flat = nxt.reshape(-1)
+            mask = visited[flat] == 0
+            newly = jnp.where(mask, flat, 0)
+            visited = visited.at[newly].set(1)
+            return newly, visited
+
+        keys = jnp.asarray(
+            rng.integers(0, 1 << 30, size=self.n * self.degree // 2)
+            .astype(np.int32))
+        regions = [region(0, "generate", jax.jit(generate), (keys,))]
+        i = 1
+        jb = jax.jit(bfs_level)
+        root_count = 0
+        for s in seeds:
+            if i >= self.target_regions:
+                break
+            s = int(s)
+            if s not in G or G.degree(s) == 0:
+                continue
+            root_count += 1
+            levels = nx.bfs_layers(G, s)
+            visited = jnp.zeros(self.n, jnp.int32)
+            for li, layer in enumerate(levels):
+                if li >= 12:
+                    break
+                size = max(8, 1 << int(np.ceil(np.log2(len(layer)))))
+                frontier_np = np.resize(np.asarray(layer, np.int64), size)
+                frontier = jnp.asarray(frontier_np.astype(np.int32))
+                regions.append(region(
+                    i, f"bfs_l{li}", jb, (frontier, visited),
+                    addresses=adj[frontier_np % self.n].reshape(-1)[:4096]))
+                i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class MCB(Workload):
+    """Monte-Carlo transport with particle splitting: population (and
+    access spread) grows each iteration — Fig. 1's drift."""
+
+    name = "MCB"
+
+    def __init__(self, n0: int = 16384, iters: int = 10,
+                 growth: float = 1.18, zones=(200, 160)):
+        self.n0, self.iters, self.growth, self.zones = n0, iters, growth, zones
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(41)
+        nz = self.zones[0] * self.zones[1]
+        sigma = rng.random(nz).astype(np.float32) + 0.5
+        sig = as_v(sigma, variant)
+
+        def transport(pos_zone, energy, sig):
+            s = sig[pos_zone]                         # gather zone data
+            e = energy * jnp.exp(-s.astype(jnp.float32) * 0.1)
+            tally = jnp.zeros(sig.shape, jnp.float32).at[pos_zone].add(e)
+            return tally.astype(sig.dtype), e.astype(energy.dtype)
+
+        jt = jax.jit(transport)
+        regions = []
+        n = self.n0
+        spread = 40.0
+        for i in range(self.iters):
+            n_i = int(n // width * width)
+            zones = (rng.normal(nz / 2, spread, size=n_i) % nz).astype(np.int64)
+            energy = as_v(rng.random(n_i).astype(np.float32), variant)
+            regions.append(region(i, "transport", jt,
+                                  (jnp.asarray(zones.astype(np.int32)),
+                                   energy, sig),
+                                  addresses=zones[:8192]))
+            n = int(n * self.growth)
+            spread *= 1.6                              # accesses spread out
+        return stream(self.name, width, variant, regions)
+
+
+class LULESH(Workload):
+    """Explicit hydro with very many tiny regions (the hard case)."""
+
+    name = "LULESH"
+
+    def __init__(self, n: int = 4096, phases: int = 24):
+        self.n, self.phases = n, phases
+
+    def build_stream(self, width: int, variant: str):
+        steps = 410 if width > 1 else 408   # width-dependent count (§V-B)
+        rng = np.random.default_rng(43)
+        x = as_v(blocked(rng.standard_normal(self.n).astype(np.float32),
+                         width), variant)
+        y = as_v(blocked(rng.standard_normal(self.n).astype(np.float32),
+                         width), variant)
+
+        kernels = []
+        for p in range(self.phases):
+            if p % 3 == 0:
+                k = jax.jit(lambda a, b: (a + 0.1 * b).astype(a.dtype))
+            elif p % 3 == 1:
+                k = jax.jit(lambda a, b: (a * b + jnp.roll(
+                    a.reshape(-1), 1).reshape(a.shape)).astype(a.dtype))
+            else:
+                k = jax.jit(lambda a, b: jnp.tanh(a - b).astype(a.dtype))
+            kernels.append((f"phase{p % 3}", k))
+
+        regions = []
+        i = 0
+        for _ in range(steps):
+            for name, k in kernels:
+                regions.append(region(i, name, k, (x, y))); i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class XSBench(Workload):
+    """Single-parallel-region cross-section lookup (no speed-up case)."""
+
+    name = "XSBench"
+    table_size = 1 << 18
+    lookups = 1 << 17
+
+    def __init__(self):
+        rng = np.random.default_rng(47)
+        self._table = rng.random((self.table_size, 8)).astype(np.float32)
+        self._idx = rng.integers(0, self.table_size - 1,
+                                 size=self.lookups).astype(np.int64)
+
+    def _kernel(self):
+        def lookup(table, idx, frac):
+            lo = table[idx]
+            hi = table[idx + 1]
+            xs = lo + frac[:, None] * (hi - lo)
+            return jnp.sum(xs * xs, axis=-1).astype(table.dtype)
+        return jax.jit(lookup)
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(49)
+        frac = as_v(rng.random(self.lookups).astype(np.float32), variant)
+        table = as_v(self._table, variant)
+        idx = jnp.asarray(self._idx.astype(np.int32))
+        return stream(self.name, width, variant, [
+            region(0, "lookup", self._kernel(), (table, idx, frac),
+                   addresses=self._idx[:8192])])
+
+    def split_hint(self) -> int:
+        return 16
+
+    def split_stream(self, width: int, variant: str, n_chunks: int):
+        """Beyond-paper: chunk the single region's iteration space."""
+        rng = np.random.default_rng(49)
+        frac_np = rng.random(self.lookups).astype(np.float32)
+        table = as_v(self._table, variant)
+        k = self._kernel()
+        csize = self.lookups // n_chunks
+        regions = []
+        for c in range(n_chunks):
+            sl = slice(c * csize, (c + 1) * csize)
+            regions.append(region(
+                c, "lookup_chunk", k,
+                (table, jnp.asarray(self._idx[sl].astype(np.int32)),
+                 as_v(frac_np[sl], variant)),
+                addresses=self._idx[sl][:8192]))
+        return stream(self.name + "+split", width, variant, regions,
+                      chunks=n_chunks)
+
+
+class RSBench(XSBench):
+    name = "RSBench"
+    table_size = 1 << 16
+    lookups = 1 << 16
+
+
+class PathFinder(XSBench):
+    name = "PathFinder"
+    table_size = 1 << 15
+    lookups = 1 << 15

@@ -1,0 +1,236 @@
+"""AMGMk, HPCG, miniFE, HPGMG — the iterative-solver proxies.
+
+Region structures mirror the paper's Table III counts:
+  AMGMk   1000 regions (200 V-cycles × 5 phases: relax/restrict/relax/
+          prolong/residual), perfectly regular — the easy case.
+  HPCG    ~800 regions (200 PCG iterations × 4 phases: precond/spmv/
+          dots/axpy), regular.
+  miniFE  ~1208 regions: 1 dominant assembly region (~85 % of instructions,
+          Table IV) + 1207 small CG-phase regions -> 178x-class speed-up.
+  HPGMG   convergence-gated V-cycles: the f32 and bf16 variants converge in
+          *different* cycle counts (real numerics), reproducing the paper's
+          architecture-dependent iteration-count failure (§V-B).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.regions import Workload
+from repro.hpcproxy.common import as_v, blocked, region, stream, vdtype
+
+
+# ---------------------------------------------------------------------------
+# stencil kernels (width-blocked 1D/2D Poisson)
+# ---------------------------------------------------------------------------
+
+def _jacobi1d(u, f, iters: int):
+    """u, f: [W, n] blocked 1D Poisson; 3-point Jacobi sweeps."""
+    def body(u, _):
+        flat = u.reshape(-1)
+        left = jnp.roll(flat, 1).at[0].set(0)
+        right = jnp.roll(flat, -1).at[-1].set(0)
+        new = 0.5 * (left + right + f.reshape(-1))
+        return new.reshape(u.shape).astype(u.dtype), None
+    u, _ = jax.lax.scan(body, u, None, length=iters)
+    return u
+
+
+def _residual1d(u, f):
+    flat = u.reshape(-1)
+    left = jnp.roll(flat, 1).at[0].set(0)
+    right = jnp.roll(flat, -1).at[-1].set(0)
+    r = f.reshape(-1) - (2 * flat - left - right)
+    return r.reshape(u.shape).astype(u.dtype)
+
+
+def _restrict(r):
+    flat = r.reshape(-1)
+    return flat[::2].reshape(r.shape[0], -1).astype(r.dtype)
+
+
+def _prolong(u, e_coarse):
+    ec = e_coarse.reshape(-1)
+    up = jnp.zeros(ec.shape[0] * 2, ec.dtype).at[::2].set(ec)
+    up = up + 0.5 * (jnp.roll(up, 1) + jnp.roll(up, -1))
+    return (u + up.reshape(u.shape)).astype(u.dtype)
+
+
+def _spmv2d(x, n):
+    """5-point stencil matvec on [n, n] grid flattened to [W, n*n/W]."""
+    g = x.reshape(n, n)
+    y = 4 * g
+    y = y - jnp.pad(g, ((1, 0), (0, 0)))[:-1]
+    y = y - jnp.pad(g, ((0, 1), (0, 0)))[1:]
+    y = y - jnp.pad(g, ((0, 0), (1, 0)))[:, :-1]
+    y = y - jnp.pad(g, ((0, 0), (0, 1)))[:, 1:]
+    return y.reshape(x.shape).astype(x.dtype)
+
+
+class AMGMk(Workload):
+    """Algebraic-multigrid microkernel: 200 V-cycles x 5 phases."""
+
+    name = "AMGMk"
+
+    def __init__(self, n: int = 262144, cycles: int = 200):
+        self.n, self.cycles = n, cycles
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(7)
+        n = self.n
+        u = blocked(rng.standard_normal(n).astype(np.float32), width)
+        f = blocked(rng.standard_normal(n).astype(np.float32), width)
+        uc = blocked(rng.standard_normal(n // 2).astype(np.float32), width)
+        fc = blocked(rng.standard_normal(n // 2).astype(np.float32), width)
+        uv, fv, ucv, fcv = (as_v(t, variant) for t in (u, f, uc, fc))
+
+        relax = jax.jit(lambda a, b: _jacobi1d(a, b, 4))
+        relax_c = jax.jit(lambda a, b: _jacobi1d(a, b, 8))
+        resid = jax.jit(_residual1d)
+        restrict = jax.jit(_restrict)
+        prolong = jax.jit(_prolong)
+
+        regions = []
+        i = 0
+        for _ in range(self.cycles):
+            regions.append(region(i, "relax_fine", relax, (uv, fv))); i += 1
+            regions.append(region(i, "restrict", restrict, (uv,))); i += 1
+            regions.append(region(i, "relax_coarse", relax_c, (ucv, fcv))); i += 1
+            regions.append(region(i, "prolong", prolong, (uv, ucv))); i += 1
+            regions.append(region(i, "residual", resid, (uv, fv))); i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class HPCG(Workload):
+    """Preconditioned CG: 200 iterations x 4 phases on a 2D Poisson grid."""
+
+    name = "HPCG"
+
+    def __init__(self, n: int = 512, iters: int = 200):
+        self.n, self.iters = n, iters
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(11)
+        n = self.n
+        x = blocked(rng.standard_normal(n * n).astype(np.float32), width)
+        p = blocked(rng.standard_normal(n * n).astype(np.float32), width)
+        r = blocked(rng.standard_normal(n * n).astype(np.float32), width)
+        xv, pv, rv = (as_v(t, variant) for t in (x, p, r))
+
+        precond = jax.jit(lambda r: (r / 4.0).astype(r.dtype))      # Jacobi
+        spmv = jax.jit(lambda p: _spmv2d(p, n))
+        dots = jax.jit(lambda a, b: jnp.vdot(a.astype(jnp.float32),
+                                             b.astype(jnp.float32)))
+        axpy = jax.jit(lambda x, p: (x + 0.5 * p).astype(x.dtype))
+
+        regions = []
+        i = 0
+        for _ in range(self.iters):
+            regions.append(region(i, "precond", precond, (rv,))); i += 1
+            regions.append(region(i, "spmv", spmv, (pv,))); i += 1
+            regions.append(region(i, "dot", dots, (rv, pv))); i += 1
+            regions.append(region(i, "axpy", axpy, (xv, pv))); i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class MiniFE(Workload):
+    """FE assembly (one dominant region) + CG solve (many small regions)."""
+
+    name = "miniFE"
+
+    def __init__(self, n_elems: int = 65536, iters: int = 402):
+        self.n_elems, self.iters = n_elems, iters
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(13)
+        coords = blocked(rng.standard_normal(
+            (self.n_elems, 8, 3)).astype(np.float32), width)
+        cv = as_v(coords, variant)
+        n = 65536
+        xv = as_v(blocked(rng.standard_normal(n).astype(np.float32), width),
+                  variant)
+        pv = as_v(blocked(rng.standard_normal(n).astype(np.float32), width),
+                  variant)
+
+        def assembly(c):
+            # batched 8x8 element stiffness: the 85 %-of-instructions region
+            J = jnp.einsum("wenk,wemk->wenm", c, c)
+            K = jnp.einsum("wenm,wemk->wenk", J, c)
+            K = jnp.einsum("wenk,wemk->wenm", K, c)
+            return jnp.tanh(K).sum(axis=(-1, -2)).astype(c.dtype)
+
+        spmv = jax.jit(lambda p: (2 * p - jnp.roll(p.reshape(-1), 1)
+                                  .reshape(p.shape)
+                                  - jnp.roll(p.reshape(-1), -1)
+                                  .reshape(p.shape)).astype(p.dtype))
+        dots = jax.jit(lambda a, b: jnp.vdot(a.astype(jnp.float32),
+                                             b.astype(jnp.float32)))
+        axpy = jax.jit(lambda x, p: (x + 0.3 * p).astype(x.dtype))
+
+        regions = [region(0, "assembly", jax.jit(assembly), (cv,))]
+        i = 1
+        for _ in range(self.iters):
+            regions.append(region(i, "spmv", spmv, (pv,))); i += 1
+            regions.append(region(i, "dot", dots, (xv, pv))); i += 1
+            regions.append(region(i, "axpy", axpy, (xv, pv))); i += 1
+        return stream(self.name, width, variant, regions)
+
+
+class HPGMG(Workload):
+    """Geometric multigrid solved TO CONVERGENCE — the cycle count depends
+    on the dtype variant (bf16 stalls later), so the f32 and bf16 streams
+    misalign and crossarch must declare the methodology inapplicable."""
+
+    name = "HPGMG-FV"
+
+    def __init__(self, n: int = 65536, tol: float = 2e-3,
+                 max_cycles: int = 60, alpha: float = 0.2):
+        self.n, self.tol, self.max_cycles = n, tol, max_cycles
+        self.alpha = alpha
+
+    def build_stream(self, width: int, variant: str):
+        rng = np.random.default_rng(17)
+        n = self.n
+        f_np = rng.standard_normal(n).astype(np.float32)
+        u = as_v(blocked(np.zeros(n, np.float32), width), variant)
+        f = as_v(blocked(f_np, width), variant)
+
+        alpha = self.alpha
+
+        def _relax(u, f):
+            def body(u, _):
+                flat = u.reshape(-1)
+                left = jnp.roll(flat, 1).at[0].set(0)
+                right = jnp.roll(flat, -1).at[-1].set(0)
+                new = (f.reshape(-1) + left + right) / (2.0 + alpha)
+                return new.reshape(u.shape).astype(u.dtype), None
+            u, _ = jax.lax.scan(body, u, None, length=6)
+            return u
+
+        def _resid(u, f):
+            flat = u.reshape(-1)
+            left = jnp.roll(flat, 1).at[0].set(0)
+            right = jnp.roll(flat, -1).at[-1].set(0)
+            r = f.reshape(-1) - ((2.0 + alpha) * flat - left - right)
+            return r.reshape(u.shape).astype(u.dtype)
+
+        relax = jax.jit(_relax)
+        resid = jax.jit(_resid)
+
+        regions = []
+        i = 0
+        cycles = 0
+        f0 = float(np.linalg.norm(f_np))
+        for c in range(self.max_cycles):
+            u = relax(u, f)
+            regions.append(region(i, "relax", relax, (u, f))); i += 1
+            r = resid(u, f)
+            regions.append(region(i, "residual", resid, (u, f))); i += 1
+            cycles += 1
+            rn = float(jnp.linalg.norm(r.astype(jnp.float32))) / f0
+            if rn < self.tol:
+                break
+        return stream(self.name, width, variant, regions,
+                      cycles=cycles, converged=rn < self.tol, resid=rn)

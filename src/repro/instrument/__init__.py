@@ -1,0 +1,20 @@
+"""Instrumentation: hardware models, HLO analysis, counter collection.
+
+This is the PMU-analogue layer of the framework (paper §IV-B / §V-A step 3):
+  - hwmodel:      hardware profiles + roofline cost model (TPU v5e target).
+  - hloanalysis:  post-SPMD HLO walker -> flops / bytes / collective bytes,
+                  with while-loop trip-count multipliers (XLA's own
+                  cost_analysis counts loop bodies exactly once).
+  - counters:     per-region counter collection (measured wall clock on the
+                  host CPU + modeled TPU counters), with repetition and
+                  coefficient-of-variation support per paper §V-C.
+"""
+from repro.instrument.hwmodel import HWModel, TPU_V5E, TPU_V4, CPU_HOST, roofline_terms
+from repro.instrument.hloanalysis import analyze_hlo_text, analyze_compiled, HloCost
+from repro.instrument.counters import CounterBank, measure_wall, collect_counters
+
+__all__ = [
+    "HWModel", "TPU_V5E", "TPU_V4", "CPU_HOST", "roofline_terms",
+    "analyze_hlo_text", "analyze_compiled", "HloCost",
+    "CounterBank", "measure_wall", "collect_counters",
+]

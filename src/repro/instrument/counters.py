@@ -1,0 +1,120 @@
+"""Per-region counter collection (the paper's §V-A step 3 on our hardware).
+
+The paper reads PMU counters (cycles, instructions, L1D misses, L2D misses)
+from native runs with 20 repetitions, reporting mean + standard deviation and
+screening metrics by coefficient of variation (§V-C).  Here:
+
+  measured counters (real, this container's CPU):
+      wall_ns        -- wall-clock of the jitted region, block_until_ready'd
+  modeled counters (from the compiled region's partitioned HLO):
+      hlo_flops      -- "instructions" analogue
+      vmem_bytes     -- L1-traffic analogue
+      hbm_bytes      -- L2/DRAM-traffic analogue
+      <hw>_cycles    -- modeled cycles on each HWModel (roofline bound x clock)
+
+A region's counters on "architecture A" vs "architecture B" differ in which
+of these are used as ground truth; see repro.core.crossarch.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+import jax
+
+from repro.instrument.hwmodel import HWModel, TPU_V5E, TPU_V4, roofline_terms
+from repro.instrument.hloanalysis import analyze_compiled, HloCost
+
+
+@dataclasses.dataclass
+class CounterBank:
+    """Counter values for one region on one 'architecture'."""
+
+    values: Dict[str, float] = dataclasses.field(default_factory=dict)
+    samples: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+
+    def cov(self, name: str) -> float:
+        """Coefficient of variation (paper §V-C)."""
+        s = self.samples.get(name)
+        if not s or len(s) < 2:
+            return 0.0
+        m = float(np.mean(s))
+        return float(np.std(s) / m) if m else 0.0
+
+    def merge(self, other: "CounterBank") -> None:
+        for k, v in other.values.items():
+            self.values[k] = self.values.get(k, 0.0) + v
+        for k, s in other.samples.items():
+            self.samples.setdefault(k, []).extend(s)
+
+
+def measure_wall(fn: Callable, args: Sequence, *, reps: int = 20,
+                 warmup: int = 2) -> List[float]:
+    """Wall-clock samples (ns) of a jitted callable; real measurement."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    for _ in range(max(0, warmup - 1)):
+        jax.block_until_ready(fn(*args))
+    samples = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        samples.append(float(time.perf_counter_ns() - t0))
+    return samples
+
+
+def collect_counters(
+    fn: Callable,
+    args: Sequence,
+    *,
+    reps: int = 20,
+    hw_models: Sequence[HWModel] = (TPU_V5E, TPU_V4),
+    measure: bool = True,
+    dtype: str = "f32",
+    jit_kwargs: Optional[dict] = None,
+) -> CounterBank:
+    """Compile ``fn(*args)`` once; collect measured + modeled counters."""
+    jitted = jax.jit(fn, **(jit_kwargs or {}))
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    cost: HloCost = analyze_compiled(compiled)
+
+    bank = CounterBank()
+    bank.values["hlo_flops"] = cost.flops
+    bank.values["hbm_bytes"] = cost.hbm_bytes
+    bank.values["vmem_bytes"] = cost.vmem_bytes
+    bank.values["collective_bytes"] = cost.collective_bytes
+    for hw in hw_models:
+        terms = roofline_terms(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                               collective_bytes=cost.collective_bytes,
+                               hw=hw, dtype=dtype)
+        bank.values[f"{hw.name}_time_s"] = terms.bound_s
+        bank.values[f"{hw.name}_serial_s"] = terms.serial_s
+    if measure:
+        samples = measure_wall(jitted, args, reps=reps)
+        bank.samples["wall_ns"] = samples
+        bank.values["wall_ns"] = float(np.mean(samples))
+        bank.values["wall_std_ns"] = float(np.std(samples))
+    return bank
+
+
+def instrumentation_overhead(
+    fn_whole: Callable, args_whole: Sequence,
+    fn_parts: Sequence[Callable], args_parts: Sequence[Sequence],
+    *, reps: int = 10,
+) -> float:
+    """Paper §V-C: relative overhead of per-region collection vs one region.
+
+    Runs the whole workload once uninstrumented (single jit) and once as the
+    sum of its per-region jits (our analogue of inserting PAPI calls around
+    every OpenMP parallel region: each region boundary forces a host sync and
+    re-dispatch).  Returns (sum_parts - whole) / whole.
+    """
+    whole = float(np.mean(measure_wall(jax.jit(fn_whole), args_whole, reps=reps)))
+    parts = 0.0
+    for f, a in zip(fn_parts, args_parts):
+        parts += float(np.mean(measure_wall(jax.jit(f), a, reps=reps)))
+    return (parts - whole) / whole if whole else 0.0

@@ -1,0 +1,679 @@
+"""Post-SPMD HLO analysis: flops / HBM bytes / collective wire bytes.
+
+Why this exists
+---------------
+``compiled.cost_analysis()`` counts a ``while`` body exactly once, so any
+scan-over-layers model is under-reported by a factor of ``n_layers`` (verified
+empirically: a 10-iteration scan reports exactly 1/10th of the unrolled
+flops).  Collective traffic is not reported at all.  This module walks the
+partitioned (post-SPMD) HLO text of a compiled executable and computes, with
+while-loop trip-count multipliers:
+
+  - ``flops``            per-chip floating point operations (dot = 2·|out|·K)
+  - ``hbm_bytes``        per-chip main-memory traffic (XLA fusion-boundary
+                         model: operands + outputs of top-level instructions;
+                         gather/dynamic-slice/dynamic-update-slice touch only
+                         the moved elements)
+  - ``collective_bytes`` per-chip *wire* traffic of every all-gather /
+                         all-reduce / reduce-scatter / all-to-all /
+                         collective-permute, using ring-algorithm cost:
+                           all-reduce       2·B·(g-1)/g
+                           all-gather       B_out·(g-1)/g
+                           reduce-scatter   B_out·(g-1)
+                           all-to-all       B·(g-1)/g
+                           collective-permute B
+  - ``by_scope``         the same quantities attributed to `op_name` scopes —
+                         this doubles as the region-signature source for
+                         repro.core (every named phase of a step is a region).
+
+The walker is validated against ``cost_analysis()`` on scan-free modules in
+``tests/test_hloanalysis.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 0.5, "u4": 0.5, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "f8e3m4": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "remainder", "maximum", "minimum",
+    "power", "tanh", "exponential", "exponential-minus-one", "log",
+    "log-plus-one", "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "cosine", "sine", "tan",
+    "logistic", "atan2", "erf", "compare", "select", "clamp", "and", "or",
+    "xor", "not", "shift-left", "shift-right-arithmetic",
+    "shift-right-logical", "convert", "is-finite",
+}
+
+# Instructions whose top-level appearance implies no HBM traffic of their own.
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "rng-bit-generator",
+    "copy-start", "copy-done", "all-reduce-start", "all-reduce-done",
+    "all-gather-start", "all-gather-done", "async-start", "async-done",
+    "async-update", "opt-barrier", "custom-call", "infeed", "outfeed",
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\](?:\{[^}]*\})?")
+
+
+def _shape_bytes_elems(type_str: str) -> Tuple[float, float]:
+    """(bytes, elements) of an HLO type string; tuples sum their members."""
+    total_b = 0.0
+    total_e = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue
+        elems = 1.0
+        if dims:
+            for d in dims.split(","):
+                elems *= int(d)
+        total_b += elems * _DTYPE_BYTES[dtype]
+        total_e += elems
+    return total_b, total_e
+
+
+def _shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    scope: str
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr]
+    symbols: Dict[str, str]  # instr name -> type string
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Per-chip cost roll-up of one partitioned HLO module."""
+
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    vmem_bytes: float = 0.0      # hbm traffic + fusion-internal intermediates
+    collective_bytes: float = 0.0
+    collective_detail: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: defaultdict(int))
+    op_histogram: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    by_scope: Dict[str, "HloCost"] = dataclasses.field(default_factory=dict)
+
+    def _scope(self, scope: str) -> "HloCost":
+        if scope not in self.by_scope:
+            self.by_scope[scope] = HloCost()
+        return self.by_scope[scope]
+
+    def add(self, other: "HloCost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.vmem_bytes += other.vmem_bytes * mult
+        self.collective_bytes += other.collective_bytes * mult
+        for k, v in other.collective_detail.items():
+            self.collective_detail[k] += v * mult
+        for k, v in other.collective_count.items():
+            self.collective_count[k] += int(v * mult)
+        for k, v in other.op_histogram.items():
+            self.op_histogram[k] += v * mult
+        for k, v in other.by_scope.items():
+            self._scope(k).add(v, mult)
+
+    def asdict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "collective_detail": dict(self.collective_detail),
+            "collective_count": dict(self.collective_count),
+        }
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=\[")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _parse_type_and_rest(rhs: str) -> Tuple[str, str]:
+    """Split '<type> <opcode>(...)...' into (type, rest)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        depth = 0
+        for i, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    return rhs[: i + 1], rhs[i + 1:].strip()
+    m = re.match(r"^([a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*(.*)$", rhs)
+    if m:
+        return m.group(1), m.group(2)
+    # e.g. "s32[] parameter(0)" handled above; fallback: first token
+    parts = rhs.split(None, 1)
+    return parts[0], (parts[1] if len(parts) > 1 else "")
+
+
+def _parse_opcode_operands(rest: str) -> Tuple[str, List[str], str]:
+    m = re.match(r"^([\w\-]+)\(", rest)
+    if not m:
+        return rest.split("(")[0].strip(), [], ""
+    opcode = m.group(1)
+    depth = 0
+    end = len(rest)
+    for i in range(m.end() - 1, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    operand_span = rest[m.end():end]
+    operands = re.findall(r"%([\w.\-]+)", operand_span)
+    attrs = rest[end + 1:]
+    return opcode, operands, attrs
+
+
+def parse_computations(text: str) -> Tuple[Dict[str, _Computation], Optional[str]]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = _Computation(m.group(2), [], {})
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        type_str, rest = _parse_type_and_rest(rhs)
+        opcode, operands, attrs = _parse_opcode_operands(rest)
+        sm = _OPNAME_RE.search(attrs)
+        scope = sm.group(1) if sm else ""
+        cur.instrs.append(_Instr(name, type_str, opcode, operands, attrs, scope))
+        cur.symbols[name] = type_str
+    return comps, entry
+
+
+def _trip_count(instr: _Instr, comps: Dict[str, _Computation]) -> int:
+    m = _TRIP_RE.search(instr.attrs)
+    if m:
+        return int(m.group(1))
+    cm = _COND_RE.search(instr.attrs)
+    if cm and cm.group(1) in comps:
+        consts = []
+        for ci in comps[cm.group(1)].instrs:
+            consts += [int(x) for x in _CONST_INT_RE.findall(
+                ci.opcode + "(" + ",".join(ci.operands) + ")" + ci.attrs)]
+            if ci.opcode == "constant":
+                mm = re.search(r"constant\((\d+)\)", ci.type_str + " " + ci.attrs)
+                if mm:
+                    consts.append(int(mm.group(1)))
+        if consts:
+            return max(consts)
+    return 1
+
+
+def _group_size(attrs: str, num_partitions: int) -> int:
+    m = _IOTA_GROUPS_RE.search(attrs)
+    if m:
+        return max(1, int(m.group(2)))
+    m = _EXPL_GROUPS_RE.search(attrs)
+    if m:
+        group = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(1, len(group))
+    return max(1, num_partitions)
+
+
+def _wire_bytes(opcode: str, in_bytes: float, out_bytes: float, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if opcode == "all-reduce":
+        return 2.0 * out_bytes * (g - 1) / g
+    if opcode == "all-gather":
+        return out_bytes * (g - 1) / g
+    if opcode == "reduce-scatter":
+        return out_bytes * (g - 1)
+    if opcode in ("all-to-all", "ragged-all-to-all"):
+        return in_bytes * (g - 1) / g
+    if opcode == "collective-permute":
+        return out_bytes
+    if opcode == "collective-broadcast":
+        return out_bytes
+    return out_bytes
+
+
+def _dot_flops(instr: _Instr, comp: _Computation) -> float:
+    out_b, out_e = _shape_bytes_elems(instr.type_str)
+    k = 1.0
+    m = _CONTRACT_RE.search(instr.attrs)
+    if m and instr.operands:
+        lhs_type = comp.symbols.get(instr.operands[0], "")
+        dims = _shape_dims(lhs_type)
+        idxs = [int(x) for x in m.group(1).split(",") if x != ""]
+        for i in idxs:
+            if i < len(dims):
+                k *= dims[i]
+    return 2.0 * out_e * k
+
+
+class _Analyzer:
+    def __init__(self, comps: Dict[str, _Computation], num_partitions: int,
+                 scope_depth: int):
+        self.comps = comps
+        self.num_partitions = num_partitions
+        self.scope_depth = scope_depth
+        self._memo: Dict[Tuple[str, bool], HloCost] = {}
+
+    def _scope_key(self, scope: str) -> str:
+        if not scope:
+            return "<unscoped>"
+        parts = scope.split("/")
+        # strip the leading jit(...) wrapper
+        if parts and parts[0].startswith("jit("):
+            parts = parts[1:]
+        return "/".join(parts[: self.scope_depth]) if parts else "<unscoped>"
+
+    _CONVERT_ONLY = {"parameter", "convert", "tuple", "get-tuple-element",
+                     "bitcast", "constant"}
+
+    def _is_convert_only(self, comp_name: str) -> bool:
+        """True if a fused computation only changes dtype (bf16<->f32).
+
+        The CPU backend materialises f32 copies of bf16 weights (no native
+        bf16 compute); a TPU computes bf16 on the MXU directly, so these
+        fusions contribute neither flops nor HBM traffic to the modeled
+        target and are excluded from the roofline terms.
+        """
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return False
+        return all(ins.opcode in self._CONVERT_ONLY for ins in comp.instrs)
+
+    _PASS_THROUGH = {"convert", "bitcast", "copy", "reshape"}
+    _SLICE_LIKE = {"dynamic-slice", "gather", "slice"}
+
+    def _param_traffic(self, comp: _Computation) -> Dict[str, float]:
+        """Slice-aware input traffic per fusion parameter.
+
+        XLA's cost model (and real HBM behaviour) reads only the *sliced*
+        bytes when a fused dynamic-slice/gather addresses a big operand —
+        e.g. a scan body slicing one layer's weights from the [L, ...]
+        stack must not be charged the whole stack per trip.  A parameter
+        whose every (pass-through-transitive) user is slice-like is charged
+        the slice outputs; a parameter consumed only as the in-place target
+        of dynamic-update-slice is charged the update bytes (aliased).
+        """
+        users: Dict[str, List[_Instr]] = defaultdict(list)
+        for ins in comp.instrs:
+            for op in ins.operands:
+                users[op].append(ins)
+        traffic: Dict[str, float] = {}
+        for ins in comp.instrs:
+            if ins.opcode != "parameter":
+                continue
+            full, _ = _shape_bytes_elems(ins.type_str)
+            counted = 0.0
+            sliced = True
+            frontier = [ins.name]
+            seen = set()
+            while frontier and sliced:
+                name = frontier.pop()
+                if name in seen:
+                    continue
+                seen.add(name)
+                for u in users.get(name, ()):
+                    if u.opcode in self._PASS_THROUGH:
+                        frontier.append(u.name)
+                    elif u.opcode in self._SLICE_LIKE:
+                        ob, _ = _shape_bytes_elems(u.type_str)
+                        counted += ob
+                    elif u.opcode == "dynamic-update-slice" and \
+                            u.operands and u.operands[0] == name:
+                        upd, _ = _shape_bytes_elems(
+                            comp.symbols.get(u.operands[1], "")) \
+                            if len(u.operands) > 1 else (0.0, 0.0)
+                        counted += upd
+                    else:
+                        sliced = False
+                        break
+            traffic[ins.name] = min(counted, full) if sliced else full
+        return traffic
+
+    def _fusion_out_bytes(self, comp: _Computation) -> float:
+        """Effective output bytes of a fused computation: a ROOT
+        dynamic-update-slice aliases its target in place, so only the
+        update bytes hit HBM (XLA input/output aliasing)."""
+        if not comp.instrs:
+            return -1.0
+        by_name = {i.name: i for i in comp.instrs}
+
+        def resolve(ins):
+            """Follow pass-through (convert/bitcast/copy/reshape) chains —
+            the CPU backend wraps the aliasing dus in bf16<->f32 converts."""
+            hops = 0
+            while ins.opcode in self._PASS_THROUGH and ins.operands and \
+                    ins.operands[0] in by_name and hops < 8:
+                ins = by_name[ins.operands[0]]
+                hops += 1
+            return ins
+
+        def dus_update_bytes(ins):
+            if len(ins.operands) > 1:
+                return _shape_bytes_elems(
+                    comp.symbols.get(ins.operands[1], ""))[0]
+            return 0.0
+
+        root = resolve(comp.instrs[-1])
+        if root.opcode == "dynamic-update-slice":
+            return dus_update_bytes(root)
+        if root.opcode == "tuple":
+            total = 0.0
+            for op in root.operands:
+                src = by_name.get(op)
+                src = resolve(src) if src is not None else None
+                if src is not None and src.opcode == "dynamic-update-slice":
+                    total += dus_update_bytes(src)
+                else:
+                    total += _shape_bytes_elems(
+                        comp.symbols.get(op, ""))[0]
+            return total
+        return -1.0
+
+    def _fusion_flops(self, comp_name: str
+                      ) -> Tuple[float, Dict[str, float], float, float]:
+        """(flops, op histogram, internal bytes, slice-aware input bytes)
+        inside a fused computation (VMEM-resident intermediates)."""
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0, {}, 0.0, -1.0
+        flops = 0.0
+        internal = 0.0
+        hist: Dict[str, float] = defaultdict(float)
+        for ins in comp.instrs:
+            out_b, out_e = _shape_bytes_elems(ins.type_str)
+            if ins.opcode not in ("parameter", "constant", "tuple",
+                                  "get-tuple-element", "bitcast"):
+                internal += out_b
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, comp)
+                flops += f
+                hist["dot"] += f
+            elif ins.opcode in _ELEMENTWISE:
+                flops += out_e
+                hist[ins.opcode] += out_e
+            elif ins.opcode in ("reduce", "reduce-window"):
+                in_b, in_e = _shape_bytes_elems(
+                    comp.symbols.get(ins.operands[0], "")) if ins.operands else (0, 0)
+                flops += in_e
+                hist[ins.opcode] += in_e
+            elif ins.opcode == "fusion":
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    f, h, ib, _ = self._fusion_flops(cm.group(1))
+                    flops += f
+                    internal += ib
+                    for k, v in h.items():
+                        hist[k] += v
+        in_traffic = sum(self._param_traffic(comp).values())
+        return flops, hist, internal, in_traffic
+
+    def analyze(self, comp_name: str, top_level: bool = True) -> HloCost:
+        key = (comp_name, top_level)
+        if key in self._memo:
+            return self._memo[key]
+        cost = HloCost()
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            self._memo[key] = cost
+            return cost
+        # names whose production was elided as CPU-only dtype
+        # materialisation; copies/transposes of those are elided too.
+        skipped: set = set()
+        for ins in comp.instrs:
+            out_bytes, out_e = _shape_bytes_elems(ins.type_str)
+            in_bytes = 0.0
+            for op in ins.operands:
+                b, _ = _shape_bytes_elems(comp.symbols.get(op, ""))
+                in_bytes += b
+            sk = self._scope_key(ins.scope)
+            sc = cost._scope(sk)
+
+            if ins.opcode == "while":
+                bm = _BODY_RE.search(ins.attrs)
+                trips = _trip_count(ins, self.comps)
+                if bm:
+                    body_cost = self.analyze(bm.group(1), top_level=True)
+                    cost.add(body_cost, float(trips))
+                continue
+            if ins.opcode == "conditional":
+                branch_names = re.findall(r"branch_computations=\{([^}]*)\}",
+                                          ins.attrs)
+                names = []
+                if branch_names:
+                    names = re.findall(r"%?([\w.\-]+)", branch_names[0])
+                else:
+                    tb = re.search(r"true_computation=%?([\w.\-]+)", ins.attrs)
+                    fb = re.search(r"false_computation=%?([\w.\-]+)", ins.attrs)
+                    names = [m.group(1) for m in (tb, fb) if m]
+                if names:
+                    sub = [self.analyze(n, top_level=True) for n in names]
+                    # expected cost: mean over branches
+                    for s in sub:
+                        cost.add(s, 1.0 / len(sub))
+                continue
+            if ins.opcode in ("copy", "transpose") and ins.operands and \
+                    all(op in skipped for op in ins.operands):
+                skipped.add(ins.name)
+                continue
+            if ins.opcode == "fusion":
+                internal = 0.0
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm and self._is_convert_only(cm.group(1)):
+                    skipped.add(ins.name)
+                    continue            # CPU-only dtype materialisation
+                if cm and ins.operands and \
+                        all(op in skipped for op in ins.operands) and \
+                        self._fusion_flops(cm.group(1))[0] == 0.0:
+                    skipped.add(ins.name)
+                    continue            # copy/transpose of elided buffers
+                if cm:
+                    f, h, internal, slice_in = self._fusion_flops(cm.group(1))
+                    cost.flops += f
+                    sc.flops += f
+                    for k, v in h.items():
+                        cost.op_histogram[k] += v
+                    if slice_in >= 0:
+                        in_bytes = min(in_bytes, slice_in)
+                    oeff = self._fusion_out_bytes(self.comps[cm.group(1)])
+                    if oeff >= 0:
+                        out_bytes = min(out_bytes, oeff)
+                traffic = in_bytes + out_bytes
+                cost.hbm_bytes += traffic
+                sc.hbm_bytes += traffic
+                cost.vmem_bytes += traffic + internal
+                sc.vmem_bytes += traffic + internal
+                cost.op_histogram["fusion"] += out_e
+                continue
+            if ins.opcode in ("call",):
+                cm = _TOAPPLY_RE.search(ins.attrs)
+                if cm:
+                    cost.add(self.analyze(cm.group(1), top_level=True))
+                continue
+            if ins.opcode in _COLLECTIVES or (
+                    ins.opcode.endswith("-start") and
+                    ins.opcode[:-6] in _COLLECTIVES):
+                base = ins.opcode[:-6] if ins.opcode.endswith("-start") else ins.opcode
+                g = _group_size(ins.attrs, self.num_partitions)
+                wire = _wire_bytes(base, in_bytes, out_bytes, g)
+                cost.collective_bytes += wire
+                cost.collective_detail[base] += wire
+                cost.collective_count[base] += 1
+                sc.collective_bytes += wire
+                traffic = in_bytes + out_bytes
+                cost.hbm_bytes += traffic
+                sc.hbm_bytes += traffic
+                cost.vmem_bytes += traffic
+                sc.vmem_bytes += traffic
+                cost.op_histogram[base] += out_e
+                continue
+            if ins.opcode in _NO_TRAFFIC:
+                continue
+            if ins.opcode == "dot":
+                f = _dot_flops(ins, comp)
+                cost.flops += f
+                sc.flops += f
+                cost.op_histogram["dot"] += f
+                traffic = in_bytes + out_bytes
+                cost.hbm_bytes += traffic
+                sc.hbm_bytes += traffic
+                cost.vmem_bytes += traffic
+                sc.vmem_bytes += traffic
+                continue
+            if ins.opcode == "convolution":
+                # rough: 2 * |out| * (rhs elements / out-feature dim)
+                rhs_b, rhs_e = _shape_bytes_elems(
+                    comp.symbols.get(ins.operands[1], "")) if len(ins.operands) > 1 else (0, 1)
+                odims = _shape_dims(ins.type_str)
+                ofeat = odims[-1] if odims else 1
+                f = 2.0 * out_e * max(1.0, rhs_e / max(1, ofeat))
+                cost.flops += f
+                sc.flops += f
+                cost.op_histogram["convolution"] += f
+                cost.hbm_bytes += in_bytes + out_bytes
+                sc.hbm_bytes += in_bytes + out_bytes
+                cost.vmem_bytes += in_bytes + out_bytes
+                sc.vmem_bytes += in_bytes + out_bytes
+                continue
+            if ins.opcode in ("gather", "dynamic-slice"):
+                idx_bytes = 0.0
+                if len(ins.operands) > 1:
+                    idx_bytes, _ = _shape_bytes_elems(
+                        comp.symbols.get(ins.operands[-1], ""))
+                traffic = 2.0 * out_bytes + idx_bytes
+                cost.hbm_bytes += traffic
+                sc.hbm_bytes += traffic
+                cost.vmem_bytes += traffic
+                sc.vmem_bytes += traffic
+                cost.op_histogram[ins.opcode] += out_e
+                continue
+            if ins.opcode in ("dynamic-update-slice", "scatter"):
+                upd_bytes = 0.0
+                if len(ins.operands) > 1:
+                    upd_bytes, _ = _shape_bytes_elems(
+                        comp.symbols.get(ins.operands[1 if ins.opcode ==
+                                                       "dynamic-update-slice" else -1], ""))
+                traffic = 2.0 * upd_bytes
+                cost.hbm_bytes += traffic
+                sc.hbm_bytes += traffic
+                cost.vmem_bytes += traffic
+                sc.vmem_bytes += traffic
+                cost.op_histogram[ins.opcode] += out_e
+                continue
+            if ins.opcode in _ELEMENTWISE:
+                cost.flops += out_e
+                sc.flops += out_e
+                cost.op_histogram[ins.opcode] += out_e
+                cost.hbm_bytes += in_bytes + out_bytes
+                sc.hbm_bytes += in_bytes + out_bytes
+                cost.vmem_bytes += in_bytes + out_bytes
+                sc.vmem_bytes += in_bytes + out_bytes
+                continue
+            if ins.opcode in ("reduce", "reduce-window", "sort"):
+                cost.flops += sum(
+                    _shape_bytes_elems(comp.symbols.get(op, ""))[1]
+                    for op in ins.operands)
+                cost.hbm_bytes += in_bytes + out_bytes
+                sc.hbm_bytes += in_bytes + out_bytes
+                cost.vmem_bytes += in_bytes + out_bytes
+                sc.vmem_bytes += in_bytes + out_bytes
+                cost.op_histogram[ins.opcode] += out_e
+                continue
+            # default: copy/transpose/reshape/broadcast/slice/pad/concatenate…
+            traffic = in_bytes + out_bytes
+            cost.hbm_bytes += traffic
+            sc.hbm_bytes += traffic
+            cost.vmem_bytes += traffic
+            sc.vmem_bytes += traffic
+            cost.op_histogram[ins.opcode] += out_e
+        self._memo[key] = cost
+        return cost
+
+
+def analyze_hlo_text(text: str, scope_depth: int = 2) -> HloCost:
+    """Walk a partitioned HLO module and return its per-chip HloCost."""
+    comps, entry = parse_computations(text)
+    npart = 1
+    m = re.search(r"num_partitions=(\d+)", text)
+    if m:
+        npart = int(m.group(1))
+    if entry is None:
+        # fall back: computation named main-ish, else the largest
+        entry = next((n for n in comps if n.startswith("main")), None)
+        if entry is None and comps:
+            entry = max(comps, key=lambda n: len(comps[n].instrs))
+    if entry is None:
+        return HloCost()
+    analyzer = _Analyzer(comps, npart, scope_depth)
+    return analyzer.analyze(entry)
+
+
+def analyze_compiled(compiled, scope_depth: int = 2) -> HloCost:
+    """HloCost of a jax ``Compiled`` object (per-chip, post-SPMD)."""
+    return analyze_hlo_text(compiled.as_text(), scope_depth=scope_depth)
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own numbers (loop bodies counted once) — kept for cross-checks."""
+    ca = compiled.cost_analysis()
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+    }

@@ -1,0 +1,151 @@
+"""Hardware models and the roofline cost model.
+
+The paper measures cycles/instructions/L1D/L2D on two real machines (Table II).
+This container has one CPU core, so the cross-architectural axis pairs the
+*measured* host CPU with *modeled* TPU profiles (see DESIGN.md §2).  The TPU
+profiles below carry the constants mandated for the roofline analysis:
+
+    TPU v5e: 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+``roofline_terms`` converts an :class:`HloCost` into the three roofline terms
+(seconds each).  The modeled step time is ``max`` of the three (perfect
+overlap assumption — optimistic, stated); the *sum* is also reported as the
+pessimistic no-overlap bound.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+
+@dataclasses.dataclass(frozen=True)
+class HWModel:
+    """A named hardware profile (the paper's Table II analogue)."""
+
+    name: str
+    flops_bf16: float        # peak FLOP/s per chip, bf16/matrix unit
+    flops_f32: float         # peak FLOP/s per chip, f32
+    hbm_bw: float            # main-memory bandwidth per chip, bytes/s
+    vmem_bw: float           # on-chip (VMEM / L1-analogue) bandwidth, bytes/s
+    link_bw: float           # per-link interconnect bandwidth, bytes/s
+    hbm_per_chip: float      # bytes of main memory per chip
+    vmem_per_chip: float     # bytes of VMEM/scratch per chip
+    vector_isa: str          # the "vector capability" label (paper §III)
+
+    def peak_flops(self, dtype: str = "bf16") -> float:
+        return self.flops_bf16 if dtype in ("bf16", "bfloat16", "f16") else self.flops_f32
+
+
+# Target platform for every kernel and sharding decision in this repo.
+TPU_V5E = HWModel(
+    name="tpu_v5e",
+    flops_bf16=197e12,
+    flops_f32=49.25e12,
+    hbm_bw=819e9,
+    vmem_bw=20e12,            # ~order-of-magnitude VMEM bandwidth
+    link_bw=50e9,             # per the assignment: ~50 GB/s/link ICI
+    hbm_per_chip=16 * 2**30,
+    vmem_per_chip=128 * 2**20,
+    vector_isa="mxu-256x256-bf16",
+)
+
+# Second modeled architecture — the "ARMv8" of our cross-architectural study.
+TPU_V4 = HWModel(
+    name="tpu_v4",
+    flops_bf16=275e12,
+    flops_f32=68.75e12,
+    hbm_bw=1228e9,
+    vmem_bw=25e12,
+    link_bw=45e9,
+    hbm_per_chip=32 * 2**30,
+    vmem_per_chip=128 * 2**20,
+    vector_isa="mxu-128x128-bf16",
+)
+
+# The machine we actually measure on (single-core CPU container).  The
+# bandwidth/peak numbers are calibrated once at import-time cost ~0 — they are
+# only used for modeled cross-checks, never for measured numbers.
+CPU_HOST = HWModel(
+    name="cpu_host",
+    flops_bf16=5e10,          # single core, no AVX-512 assumption
+    flops_f32=1e11,
+    hbm_bw=2e10,
+    vmem_bw=2e11,
+    link_bw=1e10,
+    hbm_per_chip=32 * 2**30,
+    vmem_per_chip=32 * 2**20,
+    vector_isa="x86-64-host",
+)
+
+HW_MODELS: Mapping[str, HWModel] = {
+    m.name: m for m in (TPU_V5E, TPU_V4, CPU_HOST)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class RooflineTerms:
+    """Per-chip roofline terms (seconds) for one compiled program."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)  # type: ignore[arg-type]
+
+    @property
+    def bound_s(self) -> float:
+        """Optimistic (full-overlap) modeled step time."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def serial_s(self) -> float:
+        """Pessimistic (no-overlap) modeled step time."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    def asdict(self) -> dict:
+        return {
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "bound_s": self.bound_s,
+        }
+
+
+def roofline_terms(
+    *,
+    flops: float,
+    hbm_bytes: float,
+    collective_bytes: float,
+    hw: HWModel = TPU_V5E,
+    dtype: str = "bf16",
+) -> RooflineTerms:
+    """Three-term roofline from *per-chip* HLO cost numbers.
+
+    ``flops``/``hbm_bytes``/``collective_bytes`` are per-chip quantities as
+    produced by :func:`repro.instrument.hloanalysis.analyze_compiled` on the
+    partitioned (post-SPMD) module, so no further division by chip count is
+    needed: ``HLO_FLOPs / (chips * peak)`` == ``per_chip_flops / peak``.
+    """
+    return RooflineTerms(
+        compute_s=flops / hw.peak_flops(dtype),
+        memory_s=hbm_bytes / hw.hbm_bw,
+        collective_s=collective_bytes / hw.link_bw,
+    )
+
+
+def model_flops_dense(n_params: float, n_tokens: float) -> float:
+    """The 6·N·D 'useful work' yardstick for dense-LM training."""
+    return 6.0 * n_params * n_tokens
+
+
+def model_flops_forward(n_params: float, n_tokens: float) -> float:
+    """2·N·D for inference (prefill/decode)."""
+    return 2.0 * n_params * n_tokens

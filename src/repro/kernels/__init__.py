@@ -1,0 +1,16 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>.py (pl.pallas_call + explicit BlockSpec VMEM
+tiling), with ops.py as the jit'd public wrapper and ref.py as the pure-jnp
+oracle.  Validated in interpret mode on CPU; on TPU pass interpret=False.
+
+  flash_attention  causal/SWA GQA attention (training + prefill hot-spot)
+  flash_decode     1-token decode vs long KV cache, partial-softmax output
+                   for one-collective cross-shard combination
+  stack_distance   the methodology's own O(N²) reuse-distance loop
+"""
+from repro.kernels.ops import (flash_attention_tpu, flash_decode,
+                               flash_decode_sharded, stack_distances)
+
+__all__ = ["flash_attention_tpu", "flash_decode", "flash_decode_sharded",
+           "stack_distances"]

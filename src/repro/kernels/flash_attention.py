@@ -1,0 +1,132 @@
+"""Pallas TPU flash-attention kernel (causal / SWA, GQA-aware).
+
+Tiling (BlockSpec -> VMEM):
+  grid = (B · KV · G, n_q_tiles, n_kv_tiles)   — kv fastest so the online-
+  softmax state (m, l, acc) lives in VMEM scratch across the kv sweep.
+  q tile   [bq, D]      VMEM
+  k/v tile [bkv, D]     VMEM   (kv-head index derived as h // G in index_map,
+                                so GQA never materialises repeated K/V)
+  scratch  acc [bq, D] f32, m/l [bq, 1] f32
+
+MXU alignment: bq/bkv default 512/512 and D = head_dim (128 for most archs)
+— contraction dims are multiples of 128.  Fully-masked tiles (kv tile
+strictly above the causal diagonal, or outside the SWA band) are skipped
+with ``pl.when`` — triangular, not rectangular, work.
+
+Validated in interpret mode against ``ref.mha_reference`` over a
+shape × dtype × causal × window sweep (tests/test_kernels.py); the XLA
+production path (models/attention.py) implements the same algorithm for the
+CPU dry-run.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bkv: int, causal: bool, window: int, scale: float,
+            skv: int):
+    i = pl.program_id(1)
+    j = pl.program_id(2)
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # tile visibility (python-static per grid position is not available, so
+    # the causal/SWA tile skip is a runtime pl.when on the tile indices)
+    first_q = i * bq
+    last_q = first_q + bq - 1
+    first_k = j * bkv
+    last_k = first_k + bkv - 1
+    visible = jnp.bool_(True)
+    if causal:
+        visible = visible & (first_k <= last_q)
+    if window > 0:
+        visible = visible & (last_k > first_q - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale          # [bq, D]
+        k = k_ref[0].astype(jnp.float32)                  # [bkv, D]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = first_q + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 0)
+        kpos = first_k + jax.lax.broadcasted_iota(jnp.int32, (bq, bkv), 1)
+        mask = kpos < skv
+        if causal:
+            mask &= kpos <= qpos
+        if window > 0:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]                               # [bq, 1]
+        m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)                    # [bq, 1]
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=1)[:, None]
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_kv",
+                              "scale", "interpret"))
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 512, block_kv: int = 512,
+                           scale: float = 1.0, interpret: bool = False):
+    """q: [BH, Sq, D] (BH = B·KV·G); k, v: [BKV, Skv, D] (BKV = B·KV)."""
+    BH, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    # zero-pad to tile multiples: Pallas OOB tiles carry unspecified data and
+    # 0·NaN would poison the p@v accumulation (mask keeps pads at weight 0).
+    Sq0 = Sq
+    pq, pk = (-Sq) % bq, (-Skv) % bkv
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0)))
+        Sq += pq
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0)))
+    nq = Sq // bq
+    nk = (Skv + pk) // bkv
+
+    kernel = functools.partial(_kernel, bq=bq, bkv=bkv, causal=causal,
+                               window=window, scale=scale, skv=Skv)
+    out = pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j, G=G: (b // G, j, 0)),
+            pl.BlockSpec((1, bkv, D), lambda b, i, j, G=G: (b // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq0]

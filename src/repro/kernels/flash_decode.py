@@ -1,0 +1,103 @@
+"""Pallas TPU flash-decode kernel: one query token vs a long KV cache.
+
+The decode_32k / long_500k shapes are memory-bound: the whole per-shard KV
+cache streams HBM->VMEM once while the query stays resident.  Tiling:
+
+  grid = (B · KV, n_s_tiles)    s fastest; online-softmax state in VMEM
+  q tile   [G, D]               resident across the sweep
+  k/v tile [bs, D]
+  out      [G, D] + per-(b,kv) logsumexp/max for cross-shard combination
+
+The kernel emits *partial* (out, m, l) so the sequence-sharded cache case
+(cache_seq -> 'model') combines shards with exactly one pmax + one psum in
+``ops.flash_decode_sharded`` — the §Perf alternative to letting GSPMD
+schedule the softmax reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_out, l_out,
+            acc_ref, m_ref, l_ref, *, bs: int, G: int, D: int, scale: float):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale              # [G, D]
+    k = k_ref[0].astype(jnp.float32)                      # [bs, D]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bs]
+    pos = j * bs + jax.lax.broadcasted_iota(jnp.int32, (G, bs), 1)
+    s = jnp.where(pos < len_ref[0], s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev[:, 0], s.max(axis=1))[:, None]
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)[:, None]
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p.astype(v_ref.dtype), v_ref[0], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)       # UNNORMALISED
+        m_out[0] = m_ref[...]
+        l_out[0] = l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "scale", "interpret"))
+def flash_decode_kernel(q, k, v, cache_len, *, block_s: int = 512,
+                        scale: float = 1.0, interpret: bool = False):
+    """q: [BKV, G, D]; k, v: [BKV, S, D]; cache_len: [BKV, 1] int32.
+    Returns (acc [BKV, G, D] f32 unnormalised, m [BKV, G, 1], l [BKV, G, 1])
+    — combine partials across shards, then out = acc_total / l_total."""
+    BKV, G, D = q.shape
+    S = k.shape[1]
+    bs = min(block_s, S)
+    ps = (-S) % bs
+    if ps:   # zero-pad: OOB tiles are unspecified and 0·NaN poisons p@v
+        k = jnp.pad(k, ((0, 0), (0, ps), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, ps), (0, 0)))
+    ns = (S + ps) // bs
+    kernel = functools.partial(_kernel, bs=bs, G=G, D=D, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, ns),
+        in_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bs, D), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, G, D), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, G, 1), lambda b, j: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, G, D), jnp.float32),
+            jax.ShapeDtypeStruct((BKV, G, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BKV, G, 1), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, cache_len)

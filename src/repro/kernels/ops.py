@@ -1,0 +1,103 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret=True`` runs the kernel bodies in Python on CPU (how this
+container validates them); on a real TPU backend pass ``interpret=False``
+and the same BlockSpecs drive the MXU/VMEM tiling.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.flash_decode import flash_decode_kernel
+from repro.kernels.stack_distance import stack_distance_kernel
+from repro.core.reuse import prev_next_occurrence
+
+
+def flash_attention_tpu(q, k, v, *, causal=True, window=0, block_q=512,
+                        block_kv=512, scale=None, interpret=False):
+    """Model-layout wrapper: q [B,Sq,H,D], k/v [B,Skv,KV,D] -> [B,Sq,H,D]."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kr = k.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
+    vr = v.transpose(0, 2, 1, 3).reshape(B * KV, -1, D)
+    out = flash_attention_kernel(qr, kr, vr, causal=causal, window=window,
+                                 block_q=block_q, block_kv=block_kv,
+                                 scale=scale, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+
+
+def flash_decode(q, k_cache, v_cache, cache_len, *, block_s=512,
+                 scale=None, interpret=False):
+    """Single-device decode: q [B,1,H,D], caches [B,S,KV,D] -> [B,1,H,D]."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KV, G, D).reshape(B * KV, G, D)
+    kr = k_cache.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    vr = v_cache.transpose(0, 2, 1, 3).reshape(B * KV, S, D)
+    lens = jnp.broadcast_to(jnp.asarray(cache_len, jnp.int32),
+                            (B * KV, 1))
+    acc, m, l = flash_decode_kernel(qr, kr, vr, lens, block_s=block_s,
+                                    scale=scale, interpret=interpret)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def flash_decode_sharded(q, k_cache, v_cache, cache_len, mesh: Mesh, *,
+                         axis: str = "model", block_s=512, scale=None,
+                         interpret=False):
+    """Sequence-sharded decode: caches sharded on S over ``axis``; combines
+    per-shard partial softmax stats with ONE pmax + ONE psum (§Perf)."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    sc = scale if scale is not None else 1.0 / math.sqrt(D)
+    n_shards = mesh.shape[axis]
+    s_loc = S // n_shards
+
+    def local(q, kc, vc):
+        idx = jax.lax.axis_index(axis)
+        offset = idx * s_loc
+        qr = q.reshape(B * KV, G, D)
+        kr = kc.transpose(0, 2, 1, 3).reshape(B * KV, s_loc, D)
+        vr = vc.transpose(0, 2, 1, 3).reshape(B * KV, s_loc, D)
+        lens = jnp.broadcast_to(
+            jnp.clip(jnp.asarray(cache_len, jnp.int32) - offset, 0, s_loc),
+            (B * KV, 1))
+        acc, m, l = flash_decode_kernel(qr, kr, vr, lens, block_s=block_s,
+                                        scale=sc, interpret=interpret)
+        m_g = jax.lax.pmax(m, axis)                      # ONE pmax
+        w = jnp.exp(m - m_g)
+        acc, l = acc * w, l * w
+        acc_l = jax.lax.psum(jnp.concatenate(
+            [acc, l], axis=-1), axis)                    # ONE psum
+        acc_t, l_t = acc_l[..., :D], acc_l[..., D:]
+        return (acc_t / jnp.maximum(l_t, 1e-30)).reshape(B, 1, H, D) \
+            .astype(q.dtype)
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(None, axis, None, None), P(None, axis, None, None)),
+        out_specs=P(), check_vma=False,
+    )(q.reshape(B, KV, G, D), k_cache, v_cache)
+
+
+def stack_distances(addresses: np.ndarray, *, interpret=True) -> np.ndarray:
+    """End-to-end reuse distances via the Pallas kernel (prev/next on host)."""
+    prev, nxt = prev_next_occurrence(np.asarray(addresses))
+    d = stack_distance_kernel(jnp.asarray(prev, jnp.int32),
+                              jnp.asarray(nxt, jnp.int32),
+                              interpret=interpret)
+    return np.asarray(d)

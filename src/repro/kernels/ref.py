@@ -1,0 +1,64 @@
+"""Pure-jnp/numpy oracles for every kernel in this package."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.reuse import (lru_stack_distances_oracle,
+                              prev_next_occurrence, stack_distances_masked)
+
+NEG_INF = -1e30
+
+
+def mha_reference(q, k, v, *, causal=True, window=0, scale=None):
+    """q: [BH, Sq, D]; k, v: [BKV, Skv, D]; grouped heads (BH = BKV·G)."""
+    BH, Sq, D = q.shape
+    BKV, Skv, _ = k.shape
+    G = BH // BKV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    kr = jnp.repeat(k, G, axis=0)
+    vr = jnp.repeat(v, G, axis=0)
+    s = jnp.einsum("bqd,bsd->bqs", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqs,bsd->bqd", p, vr.astype(jnp.float32)) \
+        .astype(q.dtype)
+
+
+def decode_reference(q, k, v, cache_len, *, scale=None):
+    """q: [BKV, G, D]; k, v: [BKV, S, D]; cache_len: [BKV, 1].
+    Returns the NORMALISED decode output [BKV, G, D] f32."""
+    BKV, G, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    s = jnp.einsum("bgd,bsd->bgs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, None, :]
+    s = jnp.where(pos < cache_len[:, :, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgs,bsd->bgd", p, v.astype(jnp.float32))
+
+
+def stack_distance_reference(addresses: np.ndarray) -> np.ndarray:
+    """Python LRU-stack oracle (re-exported from core.reuse)."""
+    return lru_stack_distances_oracle(np.asarray(addresses))
+
+
+def stack_distance_masked(addresses: np.ndarray) -> np.ndarray:
+    return stack_distances_masked(np.asarray(addresses))
+
+
+__all__ = ["mha_reference", "decode_reference", "stack_distance_reference",
+           "stack_distance_masked", "prev_next_occurrence"]

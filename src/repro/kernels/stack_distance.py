@@ -1,0 +1,74 @@
+"""Pallas TPU kernel for LRU stack distances — the methodology's own hot loop.
+
+BarrierPoint's preparation cost is dominated by signature extraction (the
+paper's Pintool run); the O(N²) part is the reuse-distance computation.  The
+closed form (core/reuse.py):
+
+    d[i] = #{ j : p[i] < j < i  and  next[j] >= i }
+
+is a boolean rank-2 reduction — ideal blocked TPU work.  Tiling:
+
+    grid = (n_i_tiles, n_j_tiles)   j fastest; per-i-tile count accumulates
+    prev tile [bi, 1]  (i rows)     in VMEM scratch across the j sweep.
+    next tile [1, bj]  (j cols)
+
+Padded j columns carry next = -1 so they never satisfy next[j] >= i.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(prev_ref, next_ref, d_ref, acc_ref, *, bi: int, bj: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    i_idx = i * bi + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 0)
+    j_idx = j * bj + jax.lax.broadcasted_iota(jnp.int32, (bi, bj), 1)
+    p = prev_ref[...]                       # [bi, 1]
+    nx = next_ref[...]                      # [1, bj]
+    count = (j_idx > p) & (j_idx < i_idx) & (nx >= i_idx)
+    acc_ref[...] += count.astype(jnp.int32).sum(axis=1)[:, None]
+
+    @pl.when(j == nj - 1)
+    def _finish():
+        d_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_i", "block_j",
+                                             "interpret"))
+def stack_distance_kernel(prev: jnp.ndarray, nxt: jnp.ndarray, *,
+                          block_i: int = 256, block_j: int = 1024,
+                          interpret: bool = False) -> jnp.ndarray:
+    """prev, nxt: [N] int32 (pad nxt with -1).  Returns d [N] int32 with
+    first touches marked -1 (prev < 0)."""
+    n = prev.shape[0]
+    bi, bj = min(block_i, n), min(block_j, n)
+    pad_i = (-n) % bi
+    pad_j = (-n) % bj
+    p2 = jnp.pad(prev, (0, pad_i))[:, None]               # [Ni, 1]
+    n2 = jnp.pad(nxt, (0, pad_j), constant_values=-1)[None, :]  # [1, Nj]
+    kernel = functools.partial(_kernel, bi=bi, bj=bj)
+    d = pl.pallas_call(
+        kernel,
+        grid=((n + pad_i) // bi, (n + pad_j) // bj),
+        in_specs=[
+            pl.BlockSpec((bi, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bj), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n + pad_i, 1), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bi, 1), jnp.int32)],
+        interpret=interpret,
+    )(p2, n2)[:n, 0]
+    return jnp.where(prev < 0, -1, d)

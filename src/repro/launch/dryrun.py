@@ -1,0 +1,236 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (single-pod 16x16 or multi-pod 2x16x16),
+  2. builds per-arch ShardingRules + ShapeDtypeStruct input specs,
+  3. ``jit(step).lower(**specs).compile()`` — any sharding mismatch, OOM at
+     compile, or unsupported collective fails loudly (those are bugs),
+  4. prints ``memory_analysis()`` (fits-per-device proof) and
+     ``cost_analysis()``,
+  5. walks the partitioned HLO (repro.instrument.hloanalysis) for
+     trip-count-corrected flops / bytes / collective wire bytes and writes
+     the roofline artifact JSON to experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+Env: DRYRUN_XLA_FLAGS to override the fake-device count (tests use 64).
+"""
+import argparse
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCHS, SHAPES, get_config, shape_applicability,
+                           ShapeCfg)
+from repro.instrument.hloanalysis import analyze_compiled
+from repro.instrument.hwmodel import TPU_V5E, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_specs, param_specs_sharded,
+                                decode_specs, opt_specs_sharded)
+from repro.launch.steps import make_train_step, make_prefill_step, \
+    make_serve_step
+from repro.models.common import ModelConfig
+from repro.parallel.sharding import make_rules
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "experiments", "dryrun")
+
+
+def build_rules(cfg: ModelConfig, mesh, shape: Optional[ShapeCfg] = None,
+                mode: str = "tp_dp", zero1: bool = False):
+    tp = mesh.shape.get("model", 1)
+    rules = make_rules(mesh, tp_strategy=cfg.tp_strategy,
+                       kv_divisible=(cfg.n_kv_heads % tp == 0), zero1=zero1,
+                       experts_divisible=(cfg.n_experts % tp == 0
+                                          if cfg.n_experts else True))
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    if shape is not None and shape.global_batch % dp != 0:
+        # long_500k (batch 1): batch axes replicate
+        rules.rules["batch"] = None
+        rules.rules["cache_batch"] = None
+    if mode == "fsdp_tp":
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        rules.rules["d_model"] = dp_axes      # weight-sharded over data (FSDP)
+    if mode == "fsdp_dp":
+        # §Perf: full data parallelism over ALL axes + FSDP-16 weights —
+        # kills the per-layer TP activation all-reduces for small-dense
+        # archs; weights/optimizer shard 16-way over 'data' and are
+        # all-gathered per layer (GSPMD emits the FSDP schedule).
+        all_axes = tuple(a for a in ("pod", "data", "model")
+                         if a in mesh.axis_names)
+        for k in ("heads", "kv_heads", "d_ff", "experts", "expert_ff",
+                  "features", "seq_q", "qkv_out", "kv_out"):
+            rules.rules[k] = None
+        rules.rules["batch"] = all_axes
+        rules.rules["cache_batch"] = all_axes
+        rules.rules["d_model"] = ("data",)
+        rules.rules["vocab"] = "model"
+        if zero1:   # optimizer state additionally sharded over 'model'
+            rules.rules["zero"] = "model"
+    return rules
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               mode: str = "tp_dp", zero1: bool = False,
+               ce_chunk: int = 0, grad_accum: int = 1, ssm_chunk: int = 0,
+               verbose: bool = True):
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if ssm_chunk:
+        cfg = _dc.replace(cfg, ssm_chunk=ssm_chunk)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = build_rules(cfg, mesh, shape, mode=mode, zero1=zero1)
+
+    t0 = time.time()
+    with mesh:
+        params = param_specs_sharded(cfg, rules)
+        if shape.kind == "train":
+            step = make_train_step(cfg, rules=rules, ce_chunk=ce_chunk,
+                                   grad_accum=grad_accum)
+            opt = opt_specs_sharded(cfg, rules, zero1=zero1)
+            state = {"params": params, "opt": opt}
+            batch = batch_specs(cfg, shape, rules)
+            lowered = jax.jit(step, donate_argnums=(0,)).lower(state, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, rules=rules)
+            batch = batch_specs(cfg, shape, rules)
+            lowered = jax.jit(step).lower(params, batch)
+        else:  # decode
+            step = make_serve_step(cfg, rules=rules, seq_max=shape.seq_len)
+            d = decode_specs(cfg, shape, rules)
+            # cache is donated in real serving: the updated cache aliases in
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, d["cache"], d["token"])
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    mem = compiled.memory_analysis()
+    ca = compiled.cost_analysis()
+    cost = analyze_compiled(compiled)
+    n_chips = 1
+    for s in mesh.shape.values():
+        n_chips *= s
+    terms = roofline_terms(flops=cost.flops, hbm_bytes=cost.hbm_bytes,
+                           collective_bytes=cost.collective_bytes,
+                           hw=TPU_V5E, dtype=cfg.dtype)
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                   else 1)
+    nparams = cfg.n_active_params() if cfg.family == "moe" else cfg.n_params()
+    mf = (6.0 if shape.kind == "train" else 2.0) * nparams * tokens
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": mode, "zero1": zero1, "ce_chunk": ce_chunk,
+        "grad_accum": grad_accum, "ssm_chunk": ssm_chunk,
+        "n_chips": n_chips,
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_GiB": mem.argument_size_in_bytes / 2**30,
+            "output_GiB": mem.output_size_in_bytes / 2**30,
+            "temp_GiB": mem.temp_size_in_bytes / 2**30,
+            "peak_GiB": (mem.argument_size_in_bytes
+                         + mem.temp_size_in_bytes) / 2**30,
+        },
+        "xla_cost": {"flops": float(ca.get("flops", 0.0)),
+                     "bytes": float(ca.get("bytes accessed", 0.0))},
+        "hlo": cost.asdict(),
+        "roofline": terms.asdict(),
+        "model_flops_global": mf,
+        "model_flops_per_chip": mf / n_chips,
+        "useful_flops_ratio": (mf / n_chips) / max(cost.flops, 1.0),
+        "roofline_fraction": ((mf / n_chips) / TPU_V5E.peak_flops(cfg.dtype))
+        / max(terms.bound_s, 1e-30),
+    }
+    if verbose:
+        print(f"[{arch} × {shape_name} × {result['mesh']}] "
+              f"compile {result['compile_s']}s  "
+              f"peak/dev {result['memory']['peak_GiB']:.2f} GiB")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost_analysis: flops={result['xla_cost']['flops']:.3e} "
+              f"bytes={result['xla_cost']['bytes']:.3e}")
+        print(f"  hlo-walk: flops={cost.flops:.3e} hbm={cost.hbm_bytes:.3e} "
+              f"coll={cost.collective_bytes:.3e} "
+              f"({dict(cost.collective_count)})")
+        print(f"  roofline: compute={terms.compute_s*1e3:.2f}ms "
+              f"memory={terms.memory_s*1e3:.2f}ms "
+              f"collective={terms.collective_s*1e3:.2f}ms "
+              f"-> {terms.dominant}-bound; "
+              f"MODEL_FLOPS/HLO={result['useful_flops_ratio']:.2f}; "
+              f"roofline fraction={result['roofline_fraction']:.2%}")
+    return result
+
+
+def save_artifact(result: dict, suffix: str = ""):
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    name = (f"{result['arch']}_{result['shape']}_{result['mesh']}"
+            f"{('_' + suffix) if suffix else ''}.json")
+    with open(os.path.join(ARTIFACT_DIR, name), "w") as f:
+        json.dump(result, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mode", default="tp_dp",
+                    choices=["tp_dp", "fsdp_tp", "fsdp_dp"])
+    ap.add_argument("--ssm-chunk", type=int, default=0)
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--suffix", default="")
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            ok, why = shape_applicability(arch, shape)
+            if not ok:
+                print(f"[{arch} × {shape}] SKIP: {why}")
+                continue
+            for multi in meshes:
+                try:
+                    res = lower_cell(arch, shape, multi_pod=multi,
+                                     mode=args.mode, zero1=args.zero1,
+                                     ce_chunk=args.ce_chunk,
+                                     grad_accum=args.grad_accum,
+                                     ssm_chunk=args.ssm_chunk)
+                    save_artifact(res, args.suffix)
+                except Exception as e:
+                    failures.append((arch, shape, multi, repr(e)))
+                    print(f"[{arch} × {shape} × "
+                          f"{'2x16x16' if multi else '16x16'}] FAILED: {e}")
+                    traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nDRY-RUN: all requested cells lowered + compiled successfully.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; the dry-run sets
+XLA_FLAGS before any jax import and only then calls it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType, Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_local_mesh() -> Optional[Mesh]:
+    """1-device mesh with the standard axis names (smoke/examples)."""
+    n = len(jax.devices())
+    if n == 1:
+        return make_mesh((1, 1), ("data", "model"))
+    # use whatever devices exist: favour data parallelism
+    return make_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,84 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""Scope-level dry-run profiler: the §Perf 'profile' on this CPU-only host.
+
+Attributes per-chip flops / HBM bytes / collective wire bytes to op_name
+scopes of the partitioned HLO (named_scope boundaries in the model code).
+
+    python -m repro.launch.profile --arch llama3-405b --shape train_4k \
+        [--zero1 --ce-chunk 512 --mode fsdp_tp --depth 3]
+"""
+import argparse
+
+import jax
+
+from repro.configs import SHAPES, get_config
+from repro.instrument.hloanalysis import analyze_compiled
+from repro.launch import dryrun as dr
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (batch_specs, param_specs_sharded,
+                                decode_specs, opt_specs_sharded)
+from repro.launch.steps import (make_train_step, make_prefill_step,
+                                make_serve_step)
+
+
+def profile_cell(arch: str, shape_name: str, *, multi_pod=False,
+                 mode="tp_dp", zero1=False, ce_chunk=0, grad_accum=1,
+                 depth=3, top=18):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = dr.build_rules(cfg, mesh, shape, mode=mode, zero1=zero1)
+    with mesh:
+        params = param_specs_sharded(cfg, rules)
+        if shape.kind == "train":
+            step = make_train_step(cfg, rules=rules, ce_chunk=ce_chunk,
+                                   grad_accum=grad_accum)
+            opt = opt_specs_sharded(cfg, rules, zero1=zero1)
+            batch = batch_specs(cfg, shape, rules)
+            compiled = jax.jit(step, donate_argnums=(0,)).lower(
+                {"params": params, "opt": opt}, batch).compile()
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, rules=rules)
+            compiled = jax.jit(step).lower(
+                params, batch_specs(cfg, shape, rules)).compile()
+        else:
+            step = make_serve_step(cfg, rules=rules, seq_max=shape.seq_len)
+            d = decode_specs(cfg, shape, rules)
+            compiled = jax.jit(step, donate_argnums=(1,)).lower(
+                params, d["cache"], d["token"]).compile()
+    cost = analyze_compiled(compiled, scope_depth=depth)
+    print(f"\n[{arch} × {shape_name}] mode={mode} zero1={zero1} "
+          f"ce_chunk={ce_chunk} grad_accum={grad_accum}")
+    print(f"total: flops={cost.flops:.3e} hbm={cost.hbm_bytes:.3e} "
+          f"coll={cost.collective_bytes:.3e}")
+    print(f"{'scope':58s} {'flops':>10s} {'hbm':>10s} {'coll':>10s}")
+    rows = sorted(cost.by_scope.items(),
+                  key=lambda kv: -(kv[1].hbm_bytes + kv[1].collective_bytes
+                                   * 16))[:top]
+    for k, v in rows:
+        print(f"{k[:58]:58s} {v.flops:10.2e} {v.hbm_bytes:10.2e} "
+              f"{v.collective_bytes:10.2e}")
+    return cost
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mode", default="tp_dp")
+    ap.add_argument("--zero1", action="store_true")
+    ap.add_argument("--ce-chunk", type=int, default=0)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--depth", type=int, default=3)
+    ap.add_argument("--multi", action="store_true")
+    args = ap.parse_args()
+    profile_cell(args.arch, args.shape, multi_pod=args.multi, mode=args.mode,
+                 zero1=args.zero1, ce_chunk=args.ce_chunk,
+                 grad_accum=args.grad_accum, depth=args.depth)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""ShapeDtypeStruct input specs per (arch × shape × mesh) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins for every
+model input — no device allocation — exactly what ``jit(...).lower`` needs
+for the dry-run.  Modality frontends are STUBS per the assignment: the VLM
+gets precomputed patch embeddings, the audio encoder precomputed frame
+embeddings.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCfg
+from repro.models.common import ModelConfig
+from repro.models import lm
+from repro.parallel.sharding import ShardingRules, make_rules
+
+SD = jax.ShapeDtypeStruct
+
+
+def _sh(rules: Optional[ShardingRules], *axes):
+    if rules is None or rules.mesh is None:
+        return None
+    return rules.named(axes)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeCfg,
+                rules: Optional[ShardingRules]) -> Dict[str, SD]:
+    B, S = shape.global_batch, shape.seq_len
+    tok_sh = _sh(rules, "batch", "seq")
+    if cfg.family == "encoder":
+        return {
+            "frames": SD((B, S, cfg.d_model), cfg.jdtype,
+                         sharding=_sh(rules, "batch", "seq", "d_model")),
+            "labels": SD((B, S), jnp.int32, sharding=tok_sh),
+        }
+    if cfg.family == "vlm":
+        n_img = cfg.n_frontend_tokens
+        S_txt = S - n_img
+        return {
+            "tokens": SD((B, S_txt), jnp.int32, sharding=tok_sh),
+            "labels": SD((B, S_txt), jnp.int32, sharding=tok_sh),
+            "image_embeds": SD((B, n_img, cfg.d_model), cfg.jdtype,
+                               sharding=_sh(rules, "batch", "seq", "d_model")),
+        }
+    return {
+        "tokens": SD((B, S), jnp.int32, sharding=tok_sh),
+        "labels": SD((B, S), jnp.int32, sharding=tok_sh),
+    }
+
+
+def _with_shardings(tree, axes_tree, rules: Optional[ShardingRules]):
+    def leaf(sds, axes):
+        if rules is None or rules.mesh is None:
+            return sds
+        return SD(sds.shape, sds.dtype, sharding=rules.named(axes))
+    return jax.tree.map(leaf, tree, axes_tree,
+                        is_leaf=lambda x: isinstance(x, SD))
+
+
+def param_specs_sharded(cfg: ModelConfig,
+                        rules: Optional[ShardingRules]) -> Dict:
+    return _with_shardings(lm.abstract_params(cfg), lm.logical_axes(cfg),
+                           rules)
+
+
+def cache_specs_sharded(cfg: ModelConfig, shape: ShapeCfg,
+                        rules: Optional[ShardingRules]) -> Dict:
+    B, S = shape.global_batch, shape.seq_len
+    cache = lm.abstract_cache(cfg, B, S)
+    axes = lm.cache_logical_axes(cfg)
+    return _with_shardings(cache, axes, rules)
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeCfg,
+                 rules: Optional[ShardingRules]) -> Dict[str, SD]:
+    B = shape.global_batch
+    return {
+        "cache": cache_specs_sharded(cfg, shape, rules),
+        "token": SD((B, 1), jnp.int32, sharding=_sh(rules, "batch", None)),
+    }
+
+
+def opt_specs_sharded(cfg: ModelConfig, rules: Optional[ShardingRules],
+                      zero1: bool = False) -> Dict:
+    """AdamW state specs (m, v in f32; optionally ZeRO-1 over data).
+
+    ZeRO-1 attaches the data axis to the first *physically unsharded*,
+    divisible dimension of each state tensor (the logical axis name may be
+    non-None while its rule maps to no mesh axis — resolve through rules).
+    """
+    pspecs = lm.abstract_params(cfg)
+    axes = lm.logical_axes(cfg)
+    dp = 1
+    if rules is not None and rules.mesh is not None:
+        for a in ("pod", "data"):
+            if a in rules.mesh.axis_names:
+                dp *= rules.mesh.shape[a]
+
+    def st(sds, ax):
+        ax2 = ax
+        if zero1 and rules is not None and rules.mesh is not None \
+                and "data" in rules.mesh.axis_names:
+            ax2 = list(ax)
+            for i, (a, dim) in enumerate(zip(ax2, sds.shape)):
+                phys = rules.physical(a)
+                if (phys is None or phys == ()) and dim % dp == 0 \
+                        and dim >= dp:
+                    ax2[i] = "zero"
+                    break
+            ax2 = tuple(ax2)
+        sh = None if rules is None or rules.mesh is None else rules.named(ax2)
+        return SD(sds.shape, jnp.float32, sharding=sh)
+
+    m = jax.tree.map(st, pspecs, axes, is_leaf=lambda x: isinstance(x, SD))
+    v = jax.tree.map(st, pspecs, axes, is_leaf=lambda x: isinstance(x, SD))
+    count = SD((), jnp.int32, sharding=_sh(rules))
+    return {"m": m, "v": v, "count": count}

@@ -1,0 +1,98 @@
+"""Step functions: train_step / prefill_step / serve_step (decode).
+
+These are the units the dry-run lowers and the RegionPoint methodology
+samples.  ``make_train_step`` composes loss -> grad -> AdamW; options map to
+the §Perf hillclimb knobs:
+
+    zero1          ZeRO-1 optimizer-state sharding (memory term)
+    ce_chunk       chunked cross-entropy (memory term, big-vocab archs)
+    grad_accum     scanned microbatch accumulation (memory/collective overlap)
+    impl           attention implementation ('xla' | 'pallas' on real TPU)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models import lm
+from repro.optim.adamw import adamw_update, AdamWState
+from repro.parallel.sharding import ShardingRules, use_rules
+
+
+def make_train_step(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
+                    lr=3e-4, impl: str = "xla", ce_chunk: int = 0,
+                    grad_accum: int = 1, weight_decay: float = 0.1
+                    ) -> Callable:
+    mesh = rules.mesh if rules is not None else None
+
+    def loss_of(params, batch):
+        with use_rules(rules):
+            return lm.loss_fn(cfg, params, batch, mesh=mesh, impl=impl,
+                              ce_chunk=ce_chunk)
+
+    def train_step(state: Dict, batch: Dict) -> Dict:
+        params, opt = state["params"], state["opt"]
+        if grad_accum > 1:
+            def micro(carry, mb):
+                loss, g = jax.value_and_grad(loss_of)(params, mb)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], g)), None
+            split = jax.tree.map(
+                lambda t: t.reshape((grad_accum, t.shape[0] // grad_accum)
+                                    + t.shape[1:]), batch)
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (loss, grads), _ = jax.lax.scan(micro, (0.0, zero), split)
+            loss = loss / grad_accum
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        opt_state = AdamWState(m=opt["m"], v=opt["v"], count=opt["count"])
+        new_params, new_opt = adamw_update(grads, opt_state, params, lr=lr,
+                                           weight_decay=weight_decay)
+        return {
+            "params": new_params,
+            "opt": {"m": new_opt.m, "v": new_opt.v, "count": new_opt.count},
+        }, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *,
+                      rules: Optional[ShardingRules] = None,
+                      impl: str = "xla") -> Callable:
+    mesh = rules.mesh if rules is not None else None
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            return lm.prefill(cfg, params, batch, mesh=mesh, impl=impl)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
+                    impl: str = "xla", seq_max: int = 0) -> Callable:
+    """One-token decode step (the thing decode_* shapes lower)."""
+    mesh = rules.mesh if rules is not None else None
+
+    def serve_step(params, cache, token):
+        with use_rules(rules):
+            return lm.decode_step(cfg, params, cache, token, mesh=mesh,
+                                  impl=impl, seq_max=seq_max or 1)
+
+    return serve_step
+
+
+def init_state(cfg: ModelConfig, key) -> Dict:
+    params = lm.init_params(cfg, key)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "params": params,
+        "opt": {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)},
+    }

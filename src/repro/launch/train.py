@@ -1,0 +1,47 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs the fault-tolerant driver on the local device(s).  The production-mesh
+path (512 chips) is exercised by ``repro.launch.dryrun``; this entry point
+actually executes steps, so it targets configs that fit the host.
+"""
+import argparse
+
+from repro.configs import ARCHS, get_config, smoke_config
+from repro.configs import repro_100m
+from repro.runtime.driver import RunConfig, train_resumable
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="repro-100m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config of --arch")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--fail-at", type=int, default=None,
+                    help="inject a fault at this step (recovery demo)")
+    args = ap.parse_args()
+
+    if args.arch == "repro-100m":
+        cfg = repro_100m.CONFIG
+    else:
+        cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_config(cfg)
+
+    run = RunConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                    ckpt_dir=args.ckpt_dir, global_batch=args.batch,
+                    seq_len=args.seq, lr=args.lr, fail_at_step=args.fail_at)
+    print(f"training {cfg.name}: ~{cfg.n_params()/1e6:.0f}M params, "
+          f"{args.steps} steps, batch {args.batch}x{args.seq}")
+    result = train_resumable(cfg, run)
+    print(f"done: loss {result.losses[0]:.4f} -> {result.losses[-1]:.4f}, "
+          f"restarts={result.restarts}, stragglers={result.stragglers}")
+
+
+if __name__ == "__main__":
+    main()

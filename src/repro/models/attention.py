@@ -1,0 +1,263 @@
+"""Attention: blocked online-softmax ("flash") attention in pure JAX.
+
+This is the production XLA path for both TPU and the CPU dry-run; the Pallas
+kernel in ``repro.kernels.flash_attention`` implements the same tiling for
+the TPU backend (selected via ``impl='pallas'``).
+
+Design points (TPU adaptation, see DESIGN.md):
+  - never materialises [Sq, Skv]: q is processed in ``block_q`` tiles
+    (python-unrolled, so causal/SWA tiles that are fully masked are
+    *statically skipped* — triangular, not rectangular, flop count);
+  - inside each q tile, kv is scanned in ``block_kv`` tiles with the online
+    softmax recurrence (m, l, acc);
+  - GQA without materialising repeated K/V: heads grouped as
+    [B, KV, G, S, D] so the MXU contraction batches over (KV·G);
+  - custom_vjp with the standard flash backward (recompute P per tile from
+    the saved logsumexp) — O(S) residual memory;
+  - sliding-window attention restricts the kv tile range statically.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical
+
+NEG_INF = -1e30
+
+
+def _tile_mask(qpos: jnp.ndarray, kpos: jnp.ndarray, causal: bool,
+               window: int, skv: int) -> jnp.ndarray:
+    """[bq, bkv] validity mask for one (q-tile, kv-tile) pair."""
+    m = kpos[None, :] < skv                      # kv padding
+    if causal:
+        m &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        m &= kpos[None, :] > qpos[:, None] - window
+    return m
+
+
+def _kv_tile_range(iq: int, bq: int, bkv: int, skv_pad: int, causal: bool,
+                   window: int) -> Tuple[int, int]:
+    """Static kv-tile span needed by q tile ``iq`` (triangular / banded)."""
+    if not causal:
+        return 0, skv_pad // bkv
+    hi_pos = (iq + 1) * bq                       # exclusive
+    hi = min((hi_pos + bkv - 1) // bkv, skv_pad // bkv)
+    lo = 0
+    if window > 0:
+        lo_pos = max(0, iq * bq - window + 1)
+        lo = lo_pos // bkv
+    return lo, hi
+
+
+def _flash_fwd_impl(q, k, v, causal, window, bq, bkv, scale):
+    """q: [B, KV, G, Sq, D]; k, v: [B, KV, Skv, D] -> (out, lse)."""
+    B, KV, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    nq = (Sq + bq - 1) // bq
+    sq_pad, skv_pad = nq * bq, ((Skv + bkv - 1) // bkv) * bkv
+    if sq_pad != Sq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, 0), (0, sq_pad - Sq), (0, 0)))
+    if skv_pad != Skv:
+        pad = ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+
+    outs, lses = [], []
+    for iq in range(nq):
+        qb = jax.lax.dynamic_slice_in_dim(q, iq * bq, bq, axis=3) * scale
+        qpos = iq * bq + jnp.arange(bq)
+        lo, hi = _kv_tile_range(iq, bq, bkv, skv_pad, causal, window)
+
+        def step(carry, jk):
+            m, l, acc = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, jk * bkv, bkv, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, jk * bkv, bkv, axis=2)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+            kpos = jk * bkv + jnp.arange(bkv)
+            s = jnp.where(_tile_mask(qpos, kpos, causal, window, Skv)
+                          [None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bksd->bkgqd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, KV, G, bq), NEG_INF, jnp.float32),
+                jnp.zeros((B, KV, G, bq), jnp.float32),
+                jnp.zeros((B, KV, G, bq, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(step, init, jnp.arange(lo, hi))
+        l_safe = jnp.maximum(l, 1e-30)
+        outs.append((acc / l_safe[..., None]).astype(q.dtype))
+        lses.append(m + jnp.log(l_safe))
+    out = jnp.concatenate(outs, axis=3)[:, :, :, :Sq]
+    lse = jnp.concatenate(lses, axis=3)[:, :, :, :Sq]
+    return out, lse
+
+
+def _flash_bwd_impl(q, k, v, out, lse, dout, causal, window, bq, bkv, scale):
+    B, KV, G, Sq, D = q.shape
+    Skv = k.shape[2]
+    nq = (Sq + bq - 1) // bq
+    sq_pad, skv_pad = nq * bq, ((Skv + bkv - 1) // bkv) * bkv
+    padq = ((0, 0), (0, 0), (0, 0), (0, sq_pad - Sq), (0, 0))
+    padk = ((0, 0), (0, 0), (0, skv_pad - Skv), (0, 0))
+    q, out, dout = (jnp.pad(t, padq) for t in (q, out, dout))
+    k, v = jnp.pad(k, padk), jnp.pad(v, padk)
+    lse = jnp.pad(lse, ((0, 0), (0, 0), (0, 0), (0, sq_pad - Sq)),
+                  constant_values=0.0)
+
+    delta = jnp.sum(out.astype(jnp.float32) * dout.astype(jnp.float32), -1)
+    dk = jnp.zeros((B, KV, skv_pad, D), jnp.float32)
+    dv = jnp.zeros((B, KV, skv_pad, D), jnp.float32)
+    dqs = []
+    for iq in range(nq):
+        sl = lambda t: jax.lax.dynamic_slice_in_dim(t, iq * bq, bq, axis=3)
+        qb, doutb = sl(q) * scale, sl(dout)
+        lseb, deltab = sl(lse), sl(delta)
+        qpos = iq * bq + jnp.arange(bq)
+        lo, hi = _kv_tile_range(iq, bq, bkv, skv_pad, causal, window)
+
+        def step(carry, jk):
+            dq_acc, dk_all, dv_all = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, jk * bkv, bkv, axis=2)
+            vb = jax.lax.dynamic_slice_in_dim(v, jk * bkv, bkv, axis=2)
+            s = jnp.einsum("bkgqd,bksd->bkgqs", qb, kb,
+                           preferred_element_type=jnp.float32)
+            kpos = jk * bkv + jnp.arange(bkv)
+            mask = _tile_mask(qpos, kpos, causal, window, Skv)[None, None, None]
+            s = jnp.where(mask, s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])          # [B,KV,G,bq,bkv]
+            dp = jnp.einsum("bkgqd,bksd->bkgqs", doutb.astype(jnp.float32),
+                            vb.astype(jnp.float32))
+            ds = p * (dp - deltab[..., None])
+            dq_blk = jnp.einsum("bkgqs,bksd->bkgqd", ds,
+                                kb.astype(jnp.float32)) * scale
+            dk_blk = jnp.einsum("bkgqs,bkgqd->bksd", ds,
+                                qb.astype(jnp.float32))
+            dv_blk = jnp.einsum("bkgqs,bkgqd->bksd",
+                                p.astype(jnp.float32),
+                                doutb.astype(jnp.float32))
+            dk_all = jax.lax.dynamic_update_slice_in_dim(
+                dk_all, jax.lax.dynamic_slice_in_dim(dk_all, jk * bkv, bkv, 2)
+                + dk_blk, jk * bkv, axis=2)
+            dv_all = jax.lax.dynamic_update_slice_in_dim(
+                dv_all, jax.lax.dynamic_slice_in_dim(dv_all, jk * bkv, bkv, 2)
+                + dv_blk, jk * bkv, axis=2)
+            return (dq_acc + dq_blk, dk_all, dv_all), None
+
+        init = (jnp.zeros((B, KV, G, bq, D), jnp.float32), dk, dv)
+        (dqb, dk, dv), _ = jax.lax.scan(step, init, jnp.arange(lo, hi))
+        dqs.append(dqb)
+    dq = jnp.concatenate(dqs, axis=3)[:, :, :, :Sq].astype(q.dtype)
+    dk = dk[:, :, :Skv].astype(k.dtype)
+    dv = dv[:, :, :Skv].astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.lru_cache(maxsize=None)
+def _make_flash(causal: bool, window: int, bq: int, bkv: int, scale: float):
+    @jax.custom_vjp
+    def flash(q, k, v):
+        out, _ = _flash_fwd_impl(q, k, v, causal, window, bq, bkv, scale)
+        return out
+
+    def fwd(q, k, v):
+        out, lse = _flash_fwd_impl(q, k, v, causal, window, bq, bkv, scale)
+        return out, (q, k, v, out, lse)
+
+    def bwd(res, dout):
+        q, k, v, out, lse = res
+        return _flash_bwd_impl(q, k, v, out, lse, dout, causal, window,
+                               bq, bkv, scale)
+
+    flash.defvjp(fwd, bwd)
+    return flash
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 1024,
+                    scale: Optional[float] = None,
+                    impl: str = "xla") -> jnp.ndarray:
+    """q: [B, Sq, H, D]; k, v: [B, Skv, KVH, D] -> [B, Sq, H, D]."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    bq, bkv = min(block_q, Sq), min(block_kv, k.shape[1])
+
+    if impl == "pallas" or impl == "pallas_interpret":
+        from repro.kernels.ops import flash_attention_tpu
+        return flash_attention_tpu(q, k, v, causal=causal, window=window,
+                                   block_q=bq, block_kv=bkv, scale=scale,
+                                   interpret=(impl == "pallas_interpret"))
+
+    qr = q.reshape(B, Sq, KV, G, D).transpose(0, 2, 3, 1, 4)
+    qr = logical(qr, "batch", "kv_heads", "q_per_kv", "seq_q", "head_dim")
+    kr = k.transpose(0, 2, 1, 3)
+    vr = v.transpose(0, 2, 1, 3)
+    kr = logical(kr, "batch", "kv_heads", "seq_kv", "head_dim")
+    vr = logical(vr, "batch", "kv_heads", "seq_kv", "head_dim")
+    out = _make_flash(causal, window, bq, bkv, scale)(qr, kr, vr)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return logical(out, "batch", "seq_q", "heads", "head_dim")
+
+
+def reference_attention(q, k, v, *, causal=True, window=0, scale=None):
+    """Naive O(S²) oracle (tests only)."""
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, Sq, KV, G, D)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qr.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, cache_len,
+                     *, window: int = 0,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode vs a (sequence-sharded) KV cache.
+
+    q: [B, 1, H, D]; caches: [B, S, KV, D]; cache_len: filled prefix length.
+    The cache's S axis carries the "cache_seq" logical axis (sharded over
+    'model'); the softmax over the full S lowers to partial reductions +
+    a cross-shard combine under GSPMD.  ``repro.kernels.flash_decode``
+    implements the explicit one-collective version (§Perf hillclimb).
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bskd->bkgs", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    pos = jnp.arange(S)[None, None, None, :]
+    valid = pos < cache_len
+    if window > 0:
+        valid &= pos > cache_len - 1 - window
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, D).astype(q.dtype)

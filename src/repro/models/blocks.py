@@ -1,0 +1,278 @@
+"""Per-family transformer/SSM blocks with fwd / prefill / decode entry points.
+
+Every block family implements:
+    block_fwd(x, p, ctx)             -> (x', aux)            training forward
+    block_prefill(x, p, ctx)         -> (x', cache_layer)    build KV/state
+    block_decode(x, p, cache, ctx)   -> (x', cache_layer')   one-token step
+
+so ``lm.py`` can scan them uniformly over stacked layer params.  ``ctx``
+carries config, rope tables, decode position and the mesh (for MoE psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, rmsnorm, apply_rope
+from repro.models.attention import flash_attention, decode_attention
+from repro.models.moe import moe_ffn
+from repro.models import ssm
+from repro.parallel.sharding import logical
+
+
+@dataclasses.dataclass
+class BlockCtx:
+    cfg: ModelConfig
+    cos: jnp.ndarray            # [S_max, hd/2] rope tables
+    sin: jnp.ndarray
+    mesh: object = None
+    impl: str = "xla"
+    pos: Optional[jnp.ndarray] = None   # decode position (scalar)
+    cache_len: Optional[jnp.ndarray] = None
+
+
+# ---------------------------------------------------------------------------
+# attention sub-layer (shared by dense / moe / hybrid / encoder / vlm)
+# ---------------------------------------------------------------------------
+
+def _qkv(x, p, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].reshape(D, H, hd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].reshape(D, KV, hd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].reshape(D, KV, hd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].reshape(H, hd)
+        k = k + p["bk"].reshape(KV, hd)
+        v = v + p["bv"].reshape(KV, hd)
+    q = logical(q, "batch", "seq_q", "heads", "head_dim")
+    k = logical(k, "batch", "seq_kv", "kv_heads", "head_dim")
+    v = logical(v, "batch", "seq_kv", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def attn_fwd(x, p, ctx: BlockCtx):
+    cfg = ctx.cfg
+    with jax.named_scope("attn"):
+        xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(xn, p, cfg)
+        S = x.shape[1]
+        cos, sin = ctx.cos[:S], ctx.sin[:S]
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        o = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window,
+                            block_q=cfg.attn_block_q,
+                            block_kv=cfg.attn_block_kv, impl=ctx.impl)
+        B, _, H, hd = o.shape
+        o = jnp.einsum("bshk,hkd->bsd", o,
+                       p["wo"].reshape(H, hd, x.shape[-1]))
+        return (x + o).astype(x.dtype), (k, v)
+
+
+def _ring_cache(t: jnp.ndarray, window: int) -> jnp.ndarray:
+    """Reduce a full [B, S, KV, D] prefill KV tensor to a ring buffer of
+    ``window`` slots where slot j holds absolute position p with
+    p % window == j (the layout attn_decode writes into)."""
+    import numpy as _np
+    S = t.shape[1]
+    if S < window:
+        return jnp.pad(t, ((0, 0), (0, window - S), (0, 0), (0, 0)))
+    abs_pos = _np.arange(S - window, S)
+    order = _np.argsort(abs_pos % window)
+    return t[:, abs_pos[order]]
+
+
+def attn_prefill(x, p, ctx: BlockCtx):
+    y, (k, v) = attn_fwd(x, p, ctx)
+    if ctx.cfg.window > 0:
+        k, v = _ring_cache(k, ctx.cfg.window), _ring_cache(v, ctx.cfg.window)
+    k = logical(k, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    v = logical(v, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+    return y, {"k": k, "v": v}
+
+
+def attn_decode(x, p, cache, ctx: BlockCtx):
+    cfg = ctx.cfg
+    with jax.named_scope("attn_decode"):
+        xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = _qkv(xn, p, cfg)
+        hd2 = cfg.hd // 2
+        cos = jax.lax.dynamic_slice_in_dim(ctx.cos, ctx.pos, 1, 0)
+        sin = jax.lax.dynamic_slice_in_dim(ctx.sin, ctx.pos, 1, 0)
+        q, k = apply_rope(q, cos, sin), apply_rope(k, cos, sin)
+        S_cache = cache["k"].shape[1]
+        wpos = ctx.pos % S_cache if cfg.window > 0 else ctx.pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, wpos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, wpos, axis=1)
+        kc = logical(kc, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+        vc = logical(vc, "cache_batch", "cache_seq", "kv_heads", "head_dim")
+        cache_len = jnp.minimum(ctx.pos + 1, S_cache)
+        o = decode_attention(q, kc, vc, cache_len,
+                             window=0 if cfg.window > 0 else 0)
+        o = jnp.einsum("bshk,hkd->bsd", o,
+                       p["wo"].reshape(cfg.n_heads, cfg.hd, x.shape[-1]))
+        return (x + o).astype(x.dtype), {"k": kc, "v": vc}
+
+
+# ---------------------------------------------------------------------------
+# MLP / MoE sub-layers
+# ---------------------------------------------------------------------------
+
+def mlp_fwd(x, p, ctx: BlockCtx):
+    cfg = ctx.cfg
+    with jax.named_scope("mlp"):
+        xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", xn, p["w1"])) * \
+            jnp.einsum("bsd,df->bsf", xn, p["w3"])
+        h = logical(h, "batch", "seq", "d_ff")
+        o = jnp.einsum("bsf,fd->bsd", h, p["w2"])
+        return (x + o).astype(x.dtype)
+
+
+def moe_fwd(x, p, ctx: BlockCtx):
+    cfg = ctx.cfg
+    with jax.named_scope("moe"):
+        xn = rmsnorm(x, p["ln2"], cfg.norm_eps)
+        o, aux = moe_ffn(xn, p, cfg, ctx.mesh)
+        return (x + o).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# family blocks
+# ---------------------------------------------------------------------------
+
+def dense_block_fwd(x, p, ctx):
+    x, _ = attn_fwd(x, p, ctx)
+    return mlp_fwd(x, p, ctx), jnp.zeros((), jnp.float32)
+
+
+def dense_block_prefill(x, p, ctx):
+    x, cache = attn_prefill(x, p, ctx)
+    return mlp_fwd(x, p, ctx), cache
+
+
+def dense_block_decode(x, p, cache, ctx):
+    x, cache = attn_decode(x, p, cache, ctx)
+    return mlp_fwd(x, p, ctx), cache
+
+
+def moe_block_fwd(x, p, ctx):
+    x, _ = attn_fwd(x, p, ctx)
+    x, aux = moe_fwd(x, p, ctx)
+    return x, aux
+
+
+def moe_block_prefill(x, p, ctx):
+    x, cache = attn_prefill(x, p, ctx)
+    x, _ = moe_fwd(x, p, ctx)
+    return x, cache
+
+
+def moe_block_decode(x, p, cache, ctx):
+    x, cache = attn_decode(x, p, cache, ctx)
+    x, _ = moe_fwd(x, p, ctx)
+    return x, cache
+
+
+# --- xLSTM ---------------------------------------------------------------
+
+def mlstm_block_fwd(x, p, ctx):
+    cfg = ctx.cfg
+    with jax.named_scope("mlstm"):
+        xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, _ = ssm.mlstm_seq(xn, p, n_heads=cfg.n_heads, chunk=cfg.ssm_chunk)
+        return (x + y).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def mlstm_block_prefill(x, p, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, (state, nstate) = ssm.mlstm_seq(xn, p, n_heads=cfg.n_heads,
+                                       chunk=cfg.ssm_chunk)
+    return (x + y).astype(x.dtype), {"state": state, "nstate": nstate}
+
+
+def mlstm_block_decode(x, p, cache, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, state, nstate = ssm.mlstm_decode(xn, p, cache["state"],
+                                        cache["nstate"], n_heads=cfg.n_heads)
+    return (x + y).astype(x.dtype), {"state": state, "nstate": nstate}
+
+
+def slstm_block_fwd(x, p, ctx):
+    cfg = ctx.cfg
+    with jax.named_scope("slstm"):
+        xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+        y, _ = ssm.slstm_seq(xn, p, n_heads=cfg.n_heads)
+        return (x + y).astype(x.dtype), jnp.zeros((), jnp.float32)
+
+
+def slstm_block_prefill(x, p, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, (h, c) = ssm.slstm_seq(xn, p, n_heads=cfg.n_heads)
+    return (x + y).astype(x.dtype), {"h": h, "c": c}
+
+
+def slstm_block_decode(x, p, cache, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln"], cfg.norm_eps)
+    y, (h, c) = ssm.slstm_step(xn, p, (cache["h"], cache["c"]),
+                               n_heads=cfg.n_heads)
+    return (x + y).astype(x.dtype), {"h": h, "c": c}
+
+
+# --- hymba (parallel attention + SSD heads) -------------------------------
+
+def _ssd_heads(cfg: ModelConfig) -> int:
+    di = cfg.d_inner_mult * cfg.d_model
+    return di // 64        # 64-dim SSD heads (Mamba-2 convention)
+
+
+def hymba_block_fwd(x, p, ctx):
+    cfg = ctx.cfg
+    with jax.named_scope("hymba"):
+        xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+        attn_in = dict(p, ln1=p["ln_id"])   # already normed; identity norm
+        ya, _ = attn_fwd(xn, attn_in, ctx)
+        ya = ya - xn                         # attention branch output only
+        ys, _ = ssm.ssd_seq(xn, p, n_heads=_ssd_heads(cfg),
+                            ssm_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+        x = (x + 0.5 * (ya + ys)).astype(x.dtype)
+        return mlp_fwd(x, p, ctx), jnp.zeros((), jnp.float32)
+
+
+def hymba_block_prefill(x, p, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_in = dict(p, ln1=p["ln_id"])
+    ya, kv = attn_prefill(xn, attn_in, ctx)
+    ya = ya - xn
+    ys, state = ssm.ssd_seq(xn, p, n_heads=_ssd_heads(cfg),
+                            ssm_state=cfg.ssm_state, chunk=cfg.ssm_chunk)
+    x = (x + 0.5 * (ya + ys)).astype(x.dtype)
+    return mlp_fwd(x, p, ctx), {"k": kv["k"], "v": kv["v"], "state": state}
+
+
+def hymba_block_decode(x, p, cache, ctx):
+    cfg = ctx.cfg
+    xn = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    attn_in = dict(p, ln1=p["ln_id"])
+    ya, kv = attn_decode(xn, attn_in, {"k": cache["k"], "v": cache["v"]}, ctx)
+    ya = ya - xn
+    ys, state = ssm.ssd_step(xn, p, cache["state"],
+                             n_heads=_ssd_heads(cfg), ssm_state=cfg.ssm_state)
+    x = (x + 0.5 * (ya + ys)).astype(x.dtype)
+    return mlp_fwd(x, p, ctx), {"k": kv["k"], "v": kv["v"], "state": state}
+
+
+FAMILY_BLOCKS = {
+    "dense": (dense_block_fwd, dense_block_prefill, dense_block_decode),
+    "moe": (moe_block_fwd, moe_block_prefill, moe_block_decode),
+    "hybrid": (hymba_block_fwd, hymba_block_prefill, hymba_block_decode),
+    "encoder": (dense_block_fwd, dense_block_prefill, dense_block_decode),
+    "vlm": (dense_block_fwd, dense_block_prefill, dense_block_decode),
+}

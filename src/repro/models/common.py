@@ -1,0 +1,196 @@
+"""Shared model substrate: config, norms, rotary embeddings, embeddings.
+
+Pure-JAX, pytree-parameter models (no framework dependency).  Every
+architecture in ``repro/configs`` instantiates :class:`ModelConfig`; blocks
+live in ``blocks.py``; assembly in ``lm.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import logical
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 1
+    capacity_factor: float = 1.25
+    # --- attention ---
+    window: int = 0             # 0 = full attention; >0 = sliding window
+    causal: bool = True
+    qkv_bias: bool = False
+    rope_theta: float = 5e5
+    # --- ssm / hybrid ---
+    ssm_state: int = 0
+    n_slstm: int = 0            # xlstm: trailing sLSTM layer count
+    d_inner_mult: int = 2       # mamba inner expansion
+    # --- frontends (stubbed modality encoders) ---
+    frontend: str = ""          # "" | "patch" (vlm) | "frames" (audio)
+    n_frontend_tokens: int = 0
+    # --- numerics / systems ---
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-5
+    tp_strategy: str = "head"   # "head" | "feature"  (see parallel.sharding)
+    remat: bool = True
+    vocab_pad_multiple: int = 128
+    attn_block_q: int = 512     # flash-attention tile sizes (XLA + Pallas)
+    attn_block_kv: int = 1024
+    ssm_chunk: int = 256
+    source: str = ""            # provenance tag [source; verified-tier]
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return _round_up(self.vocab, self.vocab_pad_multiple)
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def kv_groups(self) -> int:
+        return max(1, self.n_heads // max(1, self.n_kv_heads))
+
+    def n_params(self) -> float:
+        """Approximate parameter count (for MODEL_FLOPS yardsticks)."""
+        d, hd = self.d_model, self.hd
+        attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd \
+            + self.n_heads * hd * d
+        if self.family in ("ssm",):
+            di = self.d_inner_mult * d
+            mlstm = d * 3 * di + di * d + 2 * di   # q,k,v proj + out + gates
+            return self.n_layers * mlstm + self.padded_vocab * d * 2
+        mlp = 3 * d * self.d_ff if self.d_ff else 0
+        if self.family == "moe":
+            mlp_total = self.n_experts * mlp + d * self.n_experts
+        else:
+            mlp_total = mlp
+        per_layer = attn + mlp_total
+        if self.family == "hybrid":
+            di = self.d_inner_mult * d
+            per_layer += d * 2 * di + di * d + di * self.ssm_state * 2
+        emb = self.padded_vocab * d * 2  # in + out embedding (untied)
+        return self.n_layers * per_layer + emb
+
+    def n_active_params(self) -> float:
+        """Active parameters per token (MoE: only routed experts count)."""
+        if self.family != "moe":
+            return self.n_params()
+        d = self.d_model
+        mlp = 3 * d * self.d_ff
+        dense_share = self.n_params() - self.n_layers * self.n_experts * mlp
+        return dense_share + self.n_layers * self.experts_per_token * mlp
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_tables(seq_len: int, head_dim: int, theta: float,
+                offset: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    pos = jnp.arange(offset, offset + seq_len, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, S, H, D]; cos/sin: [S, D/2]."""
+    dt = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], -1).astype(dt)
+
+
+def embed(tokens: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    out = jnp.take(table, tokens, axis=0)
+    return logical(out, "batch", "seq", "d_model")
+
+
+def unembed(x: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    logits = jnp.einsum("bsd,vd->bsv", x, table)
+    return logical(logits, "batch", "seq", "vocab")
+
+
+def init_dense(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  vocab: int, z_loss: float = 1e-4,
+                  chunk: int = 0) -> jnp.ndarray:
+    """Next-token CE with logit padding mask + z-loss.
+
+    ``chunk`` > 0 enables sequence-chunked evaluation so the [B,S,V] f32
+    log-softmax never materialises at once (beyond-paper memory optimisation
+    for 256k-vocab archs; validated == unchunked in tests).
+    """
+    if chunk and logits.shape[1] > chunk:
+        n = logits.shape[1] // chunk
+        ls = logits[:, : n * chunk].reshape(logits.shape[0], n, chunk, -1)
+        lb = labels[:, : n * chunk].reshape(labels.shape[0], n, chunk)
+
+        def body(carry, xs):
+            lg, lab = xs
+            return carry + _ce_sum(lg, lab, vocab, z_loss), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(ls, 1, 0), jnp.moveaxis(lb, 1, 0)))
+        rest = logits.shape[1] - n * chunk
+        if rest:
+            total = total + _ce_sum(logits[:, n * chunk:],
+                                    labels[:, n * chunk:], vocab, z_loss)
+        return total / (labels.shape[0] * labels.shape[1])
+    return _ce_sum(logits, labels, vocab, z_loss) / (
+        labels.shape[0] * labels.shape[1])
+
+
+def _ce_sum(logits: jnp.ndarray, labels: jnp.ndarray, vocab: int,
+            z_loss: float) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    if logits.shape[-1] > vocab:  # mask padded vocab rows
+        pad = logits.shape[-1] - vocab
+        neg = jnp.full((pad,), -1e9, jnp.float32)
+        logits = logits + jnp.concatenate([jnp.zeros((vocab,)), neg])
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - picked
+    if z_loss:
+        loss = loss + z_loss * lse ** 2
+    return loss.sum()

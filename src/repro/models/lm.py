@@ -1,0 +1,378 @@
+"""Model assembly: init / forward / loss / prefill / decode for all families.
+
+Parameters are plain pytrees of jnp arrays, stacked over layers so the layer
+stack runs as a single ``lax.scan`` (bounded HLO size at 126 layers, remat'd
+per block).  ``param_specs`` carries the logical sharding axes for every
+leaf; the launcher materialises NamedShardings from them via the per-arch
+ShardingRules.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.common import (ModelConfig, rmsnorm, rope_tables, embed,
+                                 unembed, cross_entropy, init_dense)
+from repro.models.blocks import (BlockCtx, FAMILY_BLOCKS, mlstm_block_fwd,
+                                 mlstm_block_prefill, mlstm_block_decode,
+                                 slstm_block_fwd, slstm_block_prefill,
+                                 slstm_block_decode)
+from repro.parallel.sharding import logical
+
+MOE_AUX_COEF = 0.01
+
+
+# ---------------------------------------------------------------------------
+# parameter specifications (shape + logical axes per leaf)
+# ---------------------------------------------------------------------------
+
+def _attn_specs(cfg: ModelConfig, L: int) -> Dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    s = {
+        "wq": ((L, D, H * hd), ("layers", "d_model", "qkv_out")),
+        "wk": ((L, D, KV * hd), ("layers", "d_model", "kv_out")),
+        "wv": ((L, D, KV * hd), ("layers", "d_model", "kv_out")),
+        "wo": ((L, H * hd, D), ("layers", "qkv_out", "d_model")),
+        "ln1": ((L, D), ("layers", "d_model")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ((L, H * hd), ("layers", "qkv_out"))
+        s["bk"] = ((L, KV * hd), ("layers", "kv_out"))
+        s["bv"] = ((L, KV * hd), ("layers", "kv_out"))
+    return s
+
+
+def _mlp_specs(cfg: ModelConfig, L: int) -> Dict:
+    D, F = cfg.d_model, cfg.d_ff
+    return {
+        "w1": ((L, D, F), ("layers", "d_model", "d_ff")),
+        "w3": ((L, D, F), ("layers", "d_model", "d_ff")),
+        "w2": ((L, F, D), ("layers", "d_ff", "d_model")),
+        "ln2": ((L, D), ("layers", "d_model")),
+    }
+
+
+def _moe_specs(cfg: ModelConfig, L: int) -> Dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "wr": ((L, D, E), ("layers", "d_model", None)),
+        "w1": ((L, E, D, F), ("layers", "experts", "d_model", "expert_ff")),
+        "w3": ((L, E, D, F), ("layers", "experts", "d_model", "expert_ff")),
+        "w2": ((L, E, F, D), ("layers", "experts", "expert_ff", "d_model")),
+        "ln2": ((L, D), ("layers", "d_model")),
+    }
+
+
+def _mlstm_specs(cfg: ModelConfig, L: int) -> Dict:
+    D, H = cfg.d_model, cfg.n_heads
+    di = cfg.d_inner_mult * D
+    return {
+        "wq": ((L, D, di), ("layers", "d_model", None)),
+        "wk": ((L, D, di), ("layers", "d_model", None)),
+        "wv": ((L, D, di), ("layers", "d_model", "features")),
+        "wo_gate": ((L, D, di), ("layers", "d_model", "features")),
+        "wo": ((L, di, D), ("layers", "features", "d_model")),
+        "wf": ((L, D, H), ("layers", "d_model", None)),
+        "wi": ((L, D, H), ("layers", "d_model", None)),
+        "bf": ((L, H), ("layers", None)),
+        "bi": ((L, H), ("layers", None)),
+        "ln": ((L, D), ("layers", "d_model")),
+    }
+
+
+def _slstm_specs(cfg: ModelConfig, L: int) -> Dict:
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    return {
+        "wx": ((L, D, 4 * D), ("layers", "d_model", None)),
+        "r": ((L, 4, H, P, P), ("layers", None, None, None, None)),
+        "b": ((L, 4 * D), ("layers", None)),
+        "wo": ((L, D, D), ("layers", "d_model", None)),
+        "ln": ((L, D), ("layers", "d_model")),
+    }
+
+
+def _ssd_specs(cfg: ModelConfig, L: int) -> Dict:
+    D = cfg.d_model
+    di = cfg.d_inner_mult * D
+    Hm = di // 64
+    N = cfg.ssm_state
+    return {
+        "w_in": ((L, D, 2 * di), ("layers", "d_model", "features")),
+        "wB": ((L, D, N), ("layers", "d_model", None)),
+        "wC": ((L, D, N), ("layers", "d_model", None)),
+        "w_dt": ((L, D, Hm), ("layers", "d_model", None)),
+        "b_dt": ((L, Hm), ("layers", None)),
+        "logA": ((L, Hm), ("layers", None)),
+        "Dskip": ((L, Hm), ("layers", None)),
+        "w_out": ((L, di, D), ("layers", "features", "d_model")),
+        "ln_id": ((L, D), ("layers", "d_model")),
+    }
+
+
+def param_specs(cfg: ModelConfig) -> Dict:
+    L, D, Vp = cfg.n_layers, cfg.d_model, cfg.padded_vocab
+    specs: Dict = {
+        "emb": ((Vp, D), ("vocab", "d_model")),
+        "out_emb": ((Vp, D), ("vocab", "d_model")),
+        "ln_f": ((D,), ("d_model",)),
+    }
+    fam = cfg.family
+    if fam in ("dense", "encoder", "vlm"):
+        specs["blocks"] = {**_attn_specs(cfg, L), **_mlp_specs(cfg, L)}
+    elif fam == "moe":
+        specs["blocks"] = {**_attn_specs(cfg, L), **_moe_specs(cfg, L)}
+    elif fam == "hybrid":
+        specs["blocks"] = {**_attn_specs(cfg, L), **_mlp_specs(cfg, L),
+                           **_ssd_specs(cfg, L)}
+    elif fam == "ssm":
+        Lm = L - cfg.n_slstm
+        specs["mlstm"] = _mlstm_specs(cfg, Lm)
+        specs["slstm"] = _slstm_specs(cfg, cfg.n_slstm)
+    else:
+        raise ValueError(fam)
+    return specs
+
+
+def logical_axes(cfg: ModelConfig) -> Dict:
+    return jax.tree.map(lambda s: s[1], param_specs(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    dt = cfg.jdtype
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s[0], dt),
+                        param_specs(cfg),
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and isinstance(x[0], tuple))
+
+
+def init_params(cfg: ModelConfig, key) -> Dict:
+    specs = param_specs(cfg)
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple))
+    keys = jax.random.split(key, len(leaves))
+    dt = cfg.jdtype
+
+    def mk(spec, k):
+        shape, axes = spec
+        name_hint = axes[-1] if axes else None
+        if len(shape) <= 2 and ("ln" in str(name_hint) or shape[-1] == cfg.d_model
+                                and len(shape) == 1):
+            pass
+        # norms / biases / gates init
+        if shape[-1:] == (cfg.d_model,) and len(shape) <= 2 and \
+                shape[: -1] in ((), (cfg.n_layers,), (cfg.n_layers - cfg.n_slstm,),
+                                (cfg.n_slstm,)):
+            return jnp.ones(shape, dt)
+        return init_dense(k, shape, dtype=dt)
+
+    params = jax.tree.unflatten(treedef, [mk(s, k) for s, k in
+                                          zip(leaves, keys)])
+    # norm scales start at 1, everything else random — fix the ln leaves
+    def fix_norms(d):
+        for k, v in list(d.items()):
+            if isinstance(v, dict):
+                fix_norms(d[k])
+            elif k.startswith("ln") or k in ("b", "bf", "bi", "b_dt",
+                                             "bq", "bk", "bv"):
+                d[k] = jnp.ones_like(v) if k.startswith("ln") \
+                    else jnp.zeros_like(v)
+            elif k == "logA":
+                d[k] = jnp.zeros_like(v)
+            elif k == "Dskip":
+                d[k] = jnp.ones_like(v)
+    fix_norms(params)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _make_ctx(cfg: ModelConfig, seq_max: int, mesh=None, impl="xla",
+              pos=None) -> BlockCtx:
+    cos, sin = rope_tables(seq_max, cfg.hd, cfg.rope_theta)
+    return BlockCtx(cfg=cfg, cos=cos, sin=sin, mesh=mesh, impl=impl, pos=pos)
+
+
+def _scan_blocks(x, blocks, block_fn, ctx, remat: bool):
+    fn = functools.partial(block_fn, ctx=ctx)
+    if remat:
+        fn = jax.checkpoint(fn)
+
+    def body(carry, p):
+        y, aux = fn(carry, p)
+        return y, aux
+
+    x, auxs = jax.lax.scan(body, x, blocks)
+    return x, jnp.sum(auxs)
+
+
+def _input_x(cfg: ModelConfig, params, batch):
+    if cfg.family == "encoder":
+        return batch["frames"].astype(cfg.jdtype)
+    x = embed(batch["tokens"], params["emb"]).astype(cfg.jdtype)
+    if cfg.family == "vlm":
+        img = batch["image_embeds"].astype(cfg.jdtype)
+        x = jnp.concatenate([img, x], axis=1)
+    return x
+
+
+def forward(cfg: ModelConfig, params, batch, *, mesh=None, impl="xla"):
+    """Training/eval forward -> (logits [B, S, Vp], aux_loss)."""
+    x = _input_x(cfg, params, batch)
+    ctx = _make_ctx(cfg, x.shape[1], mesh, impl)
+    if cfg.family == "ssm":
+        x, _ = _scan_blocks(x, params["mlstm"], mlstm_block_fwd, ctx,
+                            cfg.remat)
+        x, _ = _scan_blocks(x, params["slstm"], slstm_block_fwd, ctx,
+                            cfg.remat)
+        aux = jnp.zeros((), jnp.float32)
+    else:
+        fwd_fn = FAMILY_BLOCKS[cfg.family][0]
+        x, aux = _scan_blocks(x, params["blocks"], fwd_fn, ctx, cfg.remat)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    with jax.named_scope("unembed"):
+        logits = unembed(x, params["out_emb"])
+    return logits, aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, mesh=None, impl="xla",
+            ce_chunk: int = 0):
+    logits, aux = forward(cfg, params, batch, mesh=mesh, impl=impl)
+    labels = batch["labels"]
+    if cfg.family == "vlm":            # text positions only
+        n_img = batch["image_embeds"].shape[1]
+        logits = logits[:, n_img - 1: n_img - 1 + labels.shape[1]]
+    with jax.named_scope("loss"):
+        ce = cross_entropy(logits, labels, cfg.vocab, chunk=ce_chunk)
+    return ce + MOE_AUX_COEF * aux
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ModelConfig, params, batch, *, mesh=None, impl="xla",
+            cache_seq: Optional[int] = None):
+    """Returns (last-position logits [B, Vp], cache pytree stacked [L, ...])."""
+    x = _input_x(cfg, params, batch)
+    S = x.shape[1]
+    ctx = _make_ctx(cfg, S, mesh, impl)
+
+    def run(stack, pf_fn):
+        def body(carry, p):
+            y, cache = pf_fn(carry, p, ctx=ctx)
+            return y, cache
+        return jax.lax.scan(body, x, stack)
+
+    if cfg.family == "ssm":
+        x, c1 = run(params["mlstm"], mlstm_block_prefill)
+        def body2(carry, p):
+            y, cache = slstm_block_prefill(carry, p, ctx=ctx)
+            return y, cache
+        x, c2 = jax.lax.scan(body2, x, params["slstm"])
+        cache = {"mlstm": c1, "slstm": c2, "pos": jnp.int32(S)}
+    else:
+        pf_fn = FAMILY_BLOCKS[cfg.family][1]
+        x, kv = run(params["blocks"], pf_fn)
+        cache = {"kv": kv, "pos": jnp.int32(S)}
+    x = rmsnorm(x[:, -1:], params["ln_f"], cfg.norm_eps)
+    logits = unembed(x, params["out_emb"])[:, 0]
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, *, mesh=None,
+                impl="xla", seq_max: Optional[int] = None):
+    """One new token for every sequence. token: [B, 1] int32."""
+    pos = cache["pos"]
+    x = embed(token, params["emb"]).astype(cfg.jdtype)
+    seq_max = seq_max or 1
+    ctx = _make_ctx(cfg, seq_max, mesh, impl, pos=pos)
+
+    if cfg.family == "ssm":
+        def bodym(carry, xs):
+            p, c = xs
+            y, c2 = mlstm_block_decode(carry, p, c, ctx=ctx)
+            return y, c2
+        x, c1 = jax.lax.scan(bodym, x, (params["mlstm"], cache["mlstm"]))
+        def bodys(carry, xs):
+            p, c = xs
+            y, c2 = slstm_block_decode(carry, p, c, ctx=ctx)
+            return y, c2
+        x, c2 = jax.lax.scan(bodys, x, (params["slstm"], cache["slstm"]))
+        new_cache = {"mlstm": c1, "slstm": c2, "pos": pos + 1}
+    else:
+        dec_fn = FAMILY_BLOCKS[cfg.family][2]
+        def body(carry, xs):
+            p, c = xs
+            y, c2 = dec_fn(carry, p, c, ctx=ctx)
+            return y, c2
+        x, kv = jax.lax.scan(body, x, (params["blocks"], cache["kv"]))
+        new_cache = {"kv": kv, "pos": pos + 1}
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(x, params["out_emb"])[:, 0]
+    return logits, new_cache
+
+
+def pad_cache(cfg: ModelConfig, cache: Dict, new_seq: int) -> Dict:
+    """Grow a prefill cache's KV capacity to ``new_seq`` slots (decode room)."""
+    if cfg.family == "ssm":
+        return cache
+    kv = dict(cache["kv"])
+    for key in ("k", "v"):
+        t = kv[key]
+        pad = new_seq - t.shape[2]
+        if pad > 0:
+            kv[key] = jnp.pad(t, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    return dict(cache, kv=kv)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> Dict:
+    """ShapeDtypeStructs for a decode cache of capacity ``seq``."""
+    L, dt = cfg.n_layers, cfg.jdtype
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    S_kv = min(seq, cfg.window) if cfg.window > 0 else seq
+    sd = jax.ShapeDtypeStruct
+    if cfg.family == "ssm":
+        Lm, Ls = L - cfg.n_slstm, cfg.n_slstm
+        di = cfg.d_inner_mult * cfg.d_model
+        P = di // cfg.n_heads
+        return {
+            "mlstm": {"state": sd((Lm, batch, cfg.n_heads, P, P), jnp.float32),
+                      "nstate": sd((Lm, batch, cfg.n_heads, P), jnp.float32)},
+            "slstm": {"h": sd((Ls, batch, cfg.d_model), jnp.float32),
+                      "c": sd((Ls, batch, cfg.d_model), jnp.float32)},
+            "pos": sd((), jnp.int32),
+        }
+    kv = {"k": sd((L, batch, S_kv, KV, hd), dt),
+          "v": sd((L, batch, S_kv, KV, hd), dt)}
+    if cfg.family == "hybrid":
+        di = cfg.d_inner_mult * cfg.d_model
+        Hm = di // 64
+        kv["state"] = sd((L, batch, Hm, cfg.ssm_state, 64), jnp.float32)
+    return {"kv": kv, "pos": sd((), jnp.int32)}
+
+
+def cache_logical_axes(cfg: ModelConfig) -> Dict:
+    if cfg.family == "ssm":
+        return {
+            "mlstm": {"state": ("layers", "cache_batch", None, None, "features"),
+                      "nstate": ("layers", "cache_batch", None, None)},
+            "slstm": {"h": ("layers", "cache_batch", None),
+                      "c": ("layers", "cache_batch", None)},
+            "pos": (),
+        }
+    kv = {"k": ("layers", "cache_batch", "cache_seq", "kv_heads", None),
+          "v": ("layers", "cache_batch", "cache_seq", "kv_heads", None)}
+    if cfg.family == "hybrid":
+        kv["state"] = ("layers", "cache_batch", None, None, None)
+    return {"kv": kv, "pos": ()}

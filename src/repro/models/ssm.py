@@ -1,0 +1,366 @@
+"""Recurrent sequence-mixing cells: mLSTM / sLSTM (xLSTM) and Mamba-2 SSD.
+
+All three share one TPU-friendly computational core,
+:func:`chunked_linear_attention` — gated linear attention evaluated
+**chunkwise-parallel**: within a chunk the quadratic [C, C] form runs on the
+MXU; across chunks a compact state [Dk, Dv] is carried by ``lax.scan``.
+This is the standard TPU adaptation of these recurrences (the GPU kernels
+the papers ship are warp-level; the insight — O(S) state instead of O(S²)
+attention — maps to chunked matmuls + a scan, see DESIGN.md hardware notes):
+
+  mLSTM : q, k, v ∈ R^P per head; state [P, P]; scalar decay (forget gate)
+          and input gate per step; output normalised by a running n-vector.
+  SSD   : C=q ∈ R^N, B=k ∈ R^N, x=v ∈ R^P; state [N, P]; decay exp(-Δ·A).
+  sLSTM : classic gated recurrence with head-block-diagonal recurrent
+          matrices — sequential by construction, runs as a lax.scan.
+
+Decode steps are the exact recurrent single-token updates (O(1) per token);
+chunked-vs-recurrent equivalence is property-tested.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical
+
+
+# ---------------------------------------------------------------------------
+# chunkwise gated linear attention core
+# ---------------------------------------------------------------------------
+
+def chunked_linear_attention(q, k, v, log_decay, gate_in, *,
+                             chunk: int = 256, state0=None,
+                             normalize: bool = False):
+    """y_t = q_t · Σ_{s<=t} exp(L_t - L_s)·i_s · (k_s v_sᵀ)   (per head)
+
+    q, k: [B, S, H, Dk]; v: [B, S, H, Dv]; log_decay, gate_in: [B, S, H]
+    (log_decay ≤ 0: per-step log forget; gate_in ≥ 0: input gate).
+    Returns (y [B, S, H, Dv], state [B, H, Dk, Dv]).
+    """
+    B, S, H, Dk = q.shape
+    Dv = v.shape[-1]
+    C = min(chunk, S)
+    S0 = S
+    if S % C:
+        # pad with identity steps: gate_in = 0 (no contribution) and
+        # log_decay = 0 (state unchanged); padded outputs are sliced off.
+        pad = C - S % C
+        q, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                   for t in (q, k, v))
+        log_decay = jnp.pad(log_decay, ((0, 0), (0, pad), (0, 0)))
+        gate_in = jnp.pad(gate_in, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    n = S // C
+
+    def resh(t, d):
+        return t.reshape(B, n, C, H, d).transpose(1, 0, 3, 2, 4)  # [n,B,H,C,d]
+
+    qc, kc, vc = resh(q, Dk), resh(k, Dk), resh(v, Dv)
+    ld = log_decay.reshape(B, n, C, H).transpose(1, 0, 3, 2)       # [n,B,H,C]
+    gi = gate_in.reshape(B, n, C, H).transpose(1, 0, 3, 2)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, Dk, Dv), jnp.float32)
+    norm0 = jnp.zeros((B, H, Dk), jnp.float32)
+
+    def step(carry, xs):
+        state, nstate = carry
+        qb, kb, vb, ldb, gib = xs
+        L = jnp.cumsum(ldb, axis=-1)                    # [B,H,C]
+        Ltot = L[..., -1:]
+        # intra-chunk quadratic part
+        s = jnp.einsum("bhtd,bhsd->bhts", qb.astype(jnp.float32),
+                       kb.astype(jnp.float32))
+        decay = jnp.exp(L[..., :, None] - L[..., None, :])
+        tri = jnp.tril(jnp.ones((C, C), bool))
+        w = jnp.where(tri[None, None], s * decay * gib[..., None, :], 0.0)
+        y = jnp.einsum("bhts,bhsv->bhtv", w, vb.astype(jnp.float32))
+        # inter-chunk: contribution of carried state
+        qdec = qb.astype(jnp.float32) * jnp.exp(L)[..., None]
+        y = y + jnp.einsum("bhtd,bhdv->bhtv", qdec, state)
+        # normaliser (mLSTM): same recurrence with k-accumulation
+        nvec = jnp.einsum("bhtd,bhd->bht", qdec, nstate) + \
+            jnp.einsum("bhts,bhs->bht", w, jnp.ones((B, H, C)))
+        # state update
+        kdec = kb.astype(jnp.float32) * \
+            (jnp.exp(Ltot - L) * gib)[..., None]
+        state = state * jnp.exp(Ltot)[..., None] + \
+            jnp.einsum("bhsd,bhsv->bhdv", kdec, vb.astype(jnp.float32))
+        nstate = nstate * jnp.exp(Ltot)[..., 0:1] + kdec.sum(2)
+        return (state, nstate), (y, nvec)
+
+    (state, nstate), (ys, ns) = jax.lax.scan(step, (state0, norm0),
+                                             (qc, kc, vc, ld, gi))
+    y = ys.transpose(1, 0, 3, 2, 4).reshape(B, S, H, Dv)
+    if normalize:
+        nv = ns.transpose(1, 0, 3, 2).reshape(B, S, H)
+        y = y / jnp.maximum(jnp.abs(nv), 1.0)[..., None]
+    return y[:, :S0].astype(v.dtype), (state, nstate)
+
+
+def linear_attention_step(state, nstate, q, k, v, log_decay, gate_in,
+                          normalize: bool = False):
+    """One-token recurrent update. q,k: [B,H,Dk]; v: [B,H,Dv];
+    log_decay, gate_in: [B,H].  Returns (y [B,H,Dv], state, nstate)."""
+    f = jnp.exp(log_decay.astype(jnp.float32))[..., None, None]
+    state = state * f + jnp.einsum(
+        "bhd,bhv->bhdv", (k * gate_in[..., None]).astype(jnp.float32),
+        v.astype(jnp.float32))
+    nstate = nstate * f[..., 0] + (k * gate_in[..., None]).astype(jnp.float32)
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    if normalize:
+        nv = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), nstate)
+        y = y / jnp.maximum(jnp.abs(nv), 1.0)[..., None]
+    return y.astype(v.dtype), state, nstate
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM)
+# ---------------------------------------------------------------------------
+
+def mlstm_gates(x, p):
+    """x: [B,S,D] -> (log_f [B,S,H], i [B,S,H]) from learned projections."""
+    f_pre = jnp.einsum("bsd,dh->bsh", x, p["wf"]) + p["bf"]
+    i_pre = jnp.einsum("bsd,dh->bsh", x, p["wi"]) + p["bi"]
+    log_f = -jax.nn.softplus(-f_pre.astype(jnp.float32))   # log sigmoid(f̃)
+    i = jax.nn.sigmoid(i_pre.astype(jnp.float32))
+    return log_f, i
+
+
+def mlstm_seq(x, p, *, n_heads: int, chunk: int = 256, state0=None):
+    """Full-sequence mLSTM mixer. x: [B,S,D] -> (y [B,S,D], state)."""
+    B, S, D = x.shape
+    di = p["wq"].shape[1]
+    P = di // n_heads
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(B, S, n_heads, P)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(B, S, n_heads, P) \
+        * (1.0 / math.sqrt(P))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(B, S, n_heads, P)
+    log_f, i = mlstm_gates(x, p)
+    y, (state, nstate) = chunked_linear_attention(
+        q, k, v, log_f, i, chunk=chunk, state0=state0, normalize=True)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    y = (y.reshape(B, S, di) * o).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["wo"]), (state, nstate)
+
+
+def mlstm_decode(x, p, state, nstate, *, n_heads: int):
+    """x: [B,1,D] single token -> (y [B,1,D], state, nstate)."""
+    B, _, D = x.shape
+    di = p["wq"].shape[1]
+    P = di // n_heads
+    q = (x[:, 0] @ p["wq"]).reshape(B, n_heads, P)
+    k = (x[:, 0] @ p["wk"]).reshape(B, n_heads, P) * (1.0 / math.sqrt(P))
+    v = (x[:, 0] @ p["wv"]).reshape(B, n_heads, P)
+    log_f, i = mlstm_gates(x, p)
+    y, state, nstate = linear_attention_step(
+        state, nstate, q, k, v, log_f[:, 0], i[:, 0], normalize=True)
+    o = jax.nn.sigmoid(x[:, 0] @ p["wo_gate"])
+    y = (y.reshape(B, di) * o).astype(x.dtype)
+    return (y @ p["wo"])[:, None], state, nstate
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar LSTM with block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def slstm_seq(x, p, *, n_heads: int, state0=None):
+    """x: [B,S,D] -> (y [B,S,D], (h, c)).  Sequential lax.scan over S."""
+    B, S, D = x.shape
+    P = D // n_heads
+
+    wx = p["wx"]          # [D, 4D]   input projections (z,i,f,o)
+    r = p["r"]            # [4, H, P, P] recurrent block-diagonal
+    b = p["b"]            # [4D]
+
+    if state0 is None:
+        h0 = jnp.zeros((B, D), jnp.float32)
+        c0 = jnp.zeros((B, D), jnp.float32)
+    else:
+        h0, c0 = state0
+
+    xz = (x.reshape(B * S, D) @ wx + b).reshape(B, S, 4 * D)
+    import os as _os
+    fused = _os.environ.get("REPRO_SLSTM_FUSED_GRAD", "1") == "1"
+    core = _slstm_core_fused if fused else _slstm_core_naive
+    ys, (h, c) = core(xz, r, h0, c0, n_heads)
+    y = jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+    return jnp.einsum("bsd,de->bse", y, p["wo"]), (h, c)
+
+
+def _slstm_gates(pre):
+    """pre: [B, D, 4] pre-activations -> (z, i, f, o) each [B, D]."""
+    z = jnp.tanh(pre[..., 0])
+    i = jax.nn.sigmoid(pre[..., 1])
+    f = jax.nn.sigmoid(pre[..., 2])
+    o = jax.nn.sigmoid(pre[..., 3])
+    return z, i, f, o
+
+
+def _slstm_pre(xt, h, r, n_heads):
+    """Gate pre-activations for one step. xt: [B, 4D], h: [B, D]."""
+    B, D = h.shape
+    P = D // n_heads
+    hh = h.reshape(B, n_heads, P)
+    rec = jnp.stack([
+        jnp.einsum("bhp,hpq->bhq", hh, r[g]).reshape(B, D)
+        for g in range(4)], -1)                         # [B, D, 4]
+    return xt.astype(jnp.float32).reshape(B, D, 4) + rec
+
+
+def _slstm_core_naive(xz, r, h0, c0, n_heads):
+    """Plain lax.scan recurrence (autodiff backward).  GSPMD places the
+    psum-over-data of the recurrent-matrix gradient INSIDE the backward
+    scan — one 16.8 MB all-reduce per timestep (§Perf cell C baseline)."""
+    def step(carry, xt):
+        h, c = carry
+        z, i, f, o = _slstm_gates(_slstm_pre(xt, h, r, n_heads))
+        c = f * c + i * z
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    (h, c), ys = jax.lax.scan(step, (h0, c0), jnp.moveaxis(xz, 1, 0))
+    return ys, (h, c)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _slstm_core_fused(xz, r, h0, c0, n_heads):
+    return _slstm_core_naive(xz, r, h0, c0, n_heads)
+
+
+def _slstm_fused_fwd(xz, r, h0, c0, n_heads):
+    """Forward scan that also stacks the cell states (bwd residual)."""
+    def step(carry, xt):
+        h, c = carry
+        z, i, f, o = _slstm_gates(_slstm_pre(xt, h, r, n_heads))
+        c_new = f * c + i * z
+        h_new = o * jnp.tanh(c_new)
+        return (h_new, c_new), (h_new, c_new)
+
+    (h, c), (ys, cs) = jax.lax.scan(step, (h0, c0), jnp.moveaxis(xz, 1, 0))
+    return (ys, (h, c)), (xz, r, h0, c0, ys, cs)
+
+
+def _slstm_fused_bwd(n_heads, res, grads):
+    """cuDNN-style RNN backward: the time scan only propagates (dh, dc) and
+    emits per-step gate pre-activation grads; the WEIGHT gradients (dr, and
+    dxz for wx/b) are batched matmuls over the stacked sequence afterwards,
+    so their data-parallel psum happens ONCE, not per timestep."""
+    dys, (dh_last, dc_last) = grads
+    xz, r, h0, c0, ys, cs = res
+    S, B, D = ys.shape
+    P = D // n_heads
+    h_prev = jnp.concatenate([h0[None], ys[:-1]], 0)    # [S, B, D]
+    c_prev = jnp.concatenate([c0[None], cs[:-1]], 0)
+    xzs = jnp.moveaxis(xz, 1, 0)                        # [S, B, 4D]
+
+    def step(carry, xs):
+        dh, dc = carry
+        xt, hp, cp, ct, dy = xs
+        z, i, f, o = _slstm_gates(_slstm_pre(xt, hp, r, n_heads))
+        tc = jnp.tanh(ct)
+        dh_tot = dh + dy
+        do = dh_tot * tc
+        dc_tot = dc + dh_tot * o * (1.0 - tc * tc)
+        dz = dc_tot * i
+        di = dc_tot * z
+        df = dc_tot * cp
+        dpre = jnp.stack([dz * (1.0 - z * z), di * i * (1.0 - i),
+                          df * f * (1.0 - f), do * o * (1.0 - o)], -1)
+        dh_prev = jnp.stack([
+            jnp.einsum("bhq,hpq->bhp", dpre[..., g].reshape(B, n_heads, P),
+                       r[g]).reshape(B, D)
+            for g in range(4)], -1).sum(-1)
+        dc_prev = dc_tot * f
+        return (dh_prev, dc_prev), dpre
+
+    (dh0, dc0), dpres = jax.lax.scan(
+        step, (dh_last.astype(jnp.float32), dc_last.astype(jnp.float32)),
+        (xzs, h_prev, c_prev, cs, dys), reverse=True)
+
+    # batched weight gradient: ONE einsum over the whole sequence
+    dr = jnp.stack([
+        jnp.einsum("sbhp,sbhq->hpq",
+                   h_prev.reshape(S, B, n_heads, P),
+                   dpres[..., g].reshape(S, B, n_heads, P))
+        for g in range(4)], 0)                          # [4, H, P, P]
+    dxz = jnp.moveaxis(dpres.reshape(S, B, 4 * D), 0, 1).astype(xz.dtype)
+    return dxz, dr.astype(r.dtype), dh0, dc0
+
+
+_slstm_core_fused.defvjp(_slstm_fused_fwd, _slstm_fused_bwd)
+
+
+def slstm_step(xt, p, state, *, n_heads: int):
+    """One token: xt [B,1,D] -> (y [B,1,D], (h,c))."""
+    B, _, D = xt.shape
+    P = D // n_heads
+    h, c = state
+    xz = xt[:, 0] @ p["wx"] + p["b"]
+    hh = h.reshape(B, n_heads, P)
+    rec = jnp.stack([
+        jnp.einsum("bhp,hpq->bhq", hh, p["r"][g]).reshape(B, D)
+        for g in range(4)], -1)
+    z, i, f, o = jnp.split(xz.astype(jnp.float32).reshape(B, D, 4) + rec,
+                           4, axis=-1)
+    z, i = jnp.tanh(z[..., 0]), jax.nn.sigmoid(i[..., 0])
+    f, o = jax.nn.sigmoid(f[..., 0]), jax.nn.sigmoid(o[..., 0])
+    c = f * c + i * z
+    h = o * jnp.tanh(c)
+    y = (h.astype(xt.dtype) @ p["wo"])[:, None]
+    return y, (h, c)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD head (hymba)
+# ---------------------------------------------------------------------------
+
+def ssd_seq(x, p, *, n_heads: int, ssm_state: int, chunk: int = 256,
+            state0=None):
+    """SSD mixer. x: [B,S,D] -> (y [B,S,D], state [B,H,N,P])."""
+    B, S, D = x.shape
+    di = p["w_in"].shape[1] // 2
+    P = di // n_heads
+    N = ssm_state
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    u, z = jnp.split(xz, 2, axis=-1)                    # [B,S,di] each
+    u = u.reshape(B, S, n_heads, P)
+    Bmat = jnp.einsum("bsd,dn->bsn", x, p["wB"])        # [B,S,N]
+    Cmat = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    Bk = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, n_heads, N))
+    Cq = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, n_heads, N))
+    dt = jax.nn.softplus(jnp.einsum("bsd,dh->bsh", x, p["w_dt"])
+                         + p["b_dt"]).astype(jnp.float32)
+    log_decay = -dt * jnp.exp(p["logA"])[None, None, :]   # [B,S,H] ≤ 0
+    gate = dt                                             # Δ-scaled input
+    y, (state, _) = chunked_linear_attention(Cq, Bk, u, log_decay, gate,
+                                             chunk=chunk, state0=state0)
+    y = y + u * p["Dskip"][None, None, :, None]
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    return jnp.einsum("bse,ed->bsd", y.astype(x.dtype), p["w_out"]), state
+
+
+def ssd_step(xt, p, state, *, n_heads: int, ssm_state: int):
+    """One-token SSD decode. xt: [B,1,D]."""
+    B, _, D = xt.shape
+    di = p["w_in"].shape[1] // 2
+    P = di // n_heads
+    xz = xt[:, 0] @ p["w_in"]
+    u, z = jnp.split(xz, 2, axis=-1)
+    u = u.reshape(B, n_heads, P)
+    Bk = jnp.broadcast_to((xt[:, 0] @ p["wB"])[:, None, :],
+                          (B, n_heads, ssm_state))
+    Cq = jnp.broadcast_to((xt[:, 0] @ p["wC"])[:, None, :],
+                          (B, n_heads, ssm_state))
+    dt = jax.nn.softplus(xt[:, 0] @ p["w_dt"] + p["b_dt"]).astype(jnp.float32)
+    log_decay = -dt * jnp.exp(p["logA"])[None, :]
+    y, state, _ = linear_attention_step(
+        state, jnp.zeros_like(state[..., 0]), Cq, Bk, u, log_decay, dt)
+    y = y + u * p["Dskip"][None, :, None]
+    y = (y.reshape(B, di) * jax.nn.silu(z)).astype(xt.dtype)
+    return (y @ p["w_out"])[:, None], state

@@ -1,0 +1,8 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update, zero1_axes
+from repro.optim.schedule import cosine_schedule
+from repro.optim.compress import (quantize_int8, dequantize_int8,
+                                  compressed_psum, ErrorFeedback)
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "zero1_axes",
+           "cosine_schedule", "quantize_int8", "dequantize_int8",
+           "compressed_psum", "ErrorFeedback"]

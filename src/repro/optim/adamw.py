@@ -1,0 +1,93 @@
+"""AdamW (decoupled weight decay) over parameter pytrees + ZeRO-1 sharding.
+
+State is a pytree mirroring params (m, v in f32 regardless of param dtype,
+the usual mixed-precision arrangement).  ``zero1_axes`` derives optimizer-
+state logical axes from parameter axes by attaching the data-parallel axis
+to the first unsharded, divisible dimension — GSPMD then materialises the
+ZeRO-1 pattern (reduce-scatter grads into the state shard, all-gather
+updated params) without any hand-written collectives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWState:
+    m: object
+    v: object
+    count: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.m, self.v, self.count), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState, AdamWState.tree_flatten, AdamWState.tree_unflatten.__func__)
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params),
+                      count=jnp.zeros((), jnp.int32))
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    sq = jax.tree.map(lambda g: jnp.sum(g.astype(jnp.float32) ** 2), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0
+                 ) -> Tuple[object, AdamWState]:
+    count = state.count + 1
+    if clip_norm:
+        gn = _global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+    lr_t = lr(count) if callable(lr) else lr
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** count.astype(jnp.float32))
+        vh = v / (1 - b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr_t * step).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, count=count)
+
+
+def zero1_axes(param_axes, param_shape, mesh, dp_axis: str = "data"):
+    """Optimizer-state logical axes for one param: attach the dp axis to the
+    first dimension that is unsharded and divisible by the dp size."""
+    if mesh is None or dp_axis not in getattr(mesh, "axis_names", ()):
+        return param_axes
+    dp = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            dp *= mesh.shape[a]
+    axes = list(param_axes)
+    for i, (ax, dim) in enumerate(zip(axes, param_shape)):
+        if ax is None and dim % dp == 0 and dim >= dp:
+            axes[i] = "zero"
+            return tuple(axes)
+    return tuple(axes)

@@ -1,0 +1,80 @@
+"""Error-feedback int8 gradient compression (inter-pod all-reduce trick).
+
+At 512+ chips the inter-pod (DCN/ICI-long) gradient all-reduce dominates the
+collective term for pure-DP training.  ``compressed_psum`` quantises a
+gradient block to int8 with a per-tensor scale before the cross-pod psum and
+dequantises after — 4x wire-byte reduction for f32 grads (2x for bf16) at the
+cost of quantisation noise, which :class:`ErrorFeedback` folds back into the
+next step (EF-SGD/1-bit-Adam style, guaranteeing convergence on convex
+objectives; property-tested on a quadratic in tests/test_optim.py).
+
+Used by the train step when ``grad_compress=True`` (off by default — §Perf
+records the collective-byte delta on the multi-pod mesh).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass
+class ErrorFeedback:
+    """Residual buffer pytree; fold-in before compress, update after."""
+    residual: object
+
+    @staticmethod
+    def init(grads):
+        return ErrorFeedback(jax.tree.map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+jax.tree_util.register_pytree_node(
+    ErrorFeedback, lambda e: ((e.residual,), None),
+    lambda aux, ch: ErrorFeedback(ch[0]))
+
+
+def compress_with_feedback(grads, ef: ErrorFeedback
+                           ) -> Tuple[object, object, ErrorFeedback]:
+    """Returns (quantised pytree, scales pytree, new feedback)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        deq = dequantize_int8(q, s)
+        return q, s, x - deq
+
+    out = jax.tree.map(one, grads, ef.residual)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    r = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return q, s, ErrorFeedback(r)
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str,
+                    residual: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """int8-quantised psum over ``axis_name`` (inside shard_map).
+
+    Sums int32-upcast int8 payloads (scales psum'd separately per shard via a
+    max so dequantisation is consistent) and returns (mean-ish sum, residual).
+    """
+    r = residual if residual is not None else jnp.zeros(x.shape, jnp.float32)
+    xin = x.astype(jnp.float32) + r
+    scale = jax.lax.pmax(jnp.maximum(jnp.max(jnp.abs(xin)), 1e-12),
+                         axis_name) / 127.0
+    q = jnp.clip(jnp.round(xin / scale), -127, 127).astype(jnp.int8)
+    new_residual = xin - q.astype(jnp.float32) * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale, new_residual

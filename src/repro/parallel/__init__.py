@@ -1,0 +1,6 @@
+"""Distribution substrate: logical-axis sharding rules over (pod, data, model)."""
+from repro.parallel.sharding import (ShardingRules, logical, current_rules,
+                                     use_rules, spec_for, constraint)
+
+__all__ = ["ShardingRules", "logical", "current_rules", "use_rules",
+           "spec_for", "constraint"]

@@ -1,0 +1,139 @@
+"""Logical-axis sharding rules (MaxText/flax-linen style, dependency-free).
+
+Model code annotates tensors with *logical* axis names ("batch", "heads",
+"d_ff", …).  A :class:`ShardingRules` maps logical names onto physical mesh
+axes ("pod", "data", "model") per architecture and per mesh, so the same
+model definition runs on the single-pod (16,16) mesh, the multi-pod
+(2,16,16) mesh, a CPU smoke mesh, or no mesh at all (rules absent = no-op).
+
+Key decisions (see DESIGN.md §5):
+  - "batch"   -> ("pod","data") when the pod axis exists, else ("data",)
+  - TP axis per arch: "head" strategy shards heads/d_ff/vocab on "model";
+    "feature" strategy (archs whose head count doesn't divide the TP degree:
+    llama4 40H, xlstm 4H, hymba 25H) shards feature dims and runs
+    sequence-parallel attention ("seq_q" -> "model").
+  - KV heads shard on "model" only when divisible, else stay replicated
+    (GQA kv=8 on TP=16 replicates KV, standard practice).
+  - decode KV caches shard sequence on "model" ("cache_seq") — always
+    divisible, scales to 512k contexts, pairs with flash-decode.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[str, Tuple[str, ...], None]
+
+
+@dataclasses.dataclass
+class ShardingRules:
+    mesh: Optional[Mesh]
+    rules: Dict[str, Axis]
+
+    def physical(self, logical_axis: Optional[str]) -> Axis:
+        if logical_axis is None:
+            return None
+        return self.rules.get(logical_axis)
+
+    def spec(self, logical_axes: Sequence[Optional[str]]) -> P:
+        used = set()
+        out = []
+        for ax in logical_axes:
+            phys = self.physical(ax)
+            if phys is None:
+                out.append(None)
+                continue
+            phys_t = (phys,) if isinstance(phys, str) else tuple(phys)
+            phys_t = tuple(p for p in phys_t if p not in used)
+            used.update(phys_t)
+            if not phys_t:
+                out.append(None)
+            elif len(phys_t) == 1:
+                out.append(phys_t[0])
+            else:
+                out.append(phys_t)
+        return P(*out)
+
+    def named(self, logical_axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(logical_axes))
+
+
+def make_rules(mesh: Optional[Mesh], *, tp_strategy: str = "head",
+               kv_divisible: bool = True, zero1: bool = False,
+               experts_divisible: bool = True) -> ShardingRules:
+    """Build the per-arch rule table for a mesh (or None for local runs)."""
+    axes = tuple(mesh.axis_names) if mesh is not None else ()
+    has_pod = "pod" in axes
+    has_model = "model" in axes
+    dp: Axis = (("pod", "data") if has_pod else ("data",)) if "data" in axes else None
+    tp: Axis = "model" if has_model else None
+    rules: Dict[str, Axis] = {
+        "batch": dp,
+        "seq": None,
+        "seq_q": tp if tp_strategy == "feature" else None,  # seq-parallel attn
+        "seq_kv": None,
+        "d_model": None,
+        "heads": tp if tp_strategy == "head" else None,
+        "kv_heads": (tp if (tp_strategy == "head" and kv_divisible) else None),
+        "head_dim": None,
+        "d_ff": tp,
+        "qkv_out": tp,      # flattened H*hd / KV*hd projection outputs
+        "kv_out": tp if kv_divisible else None,
+        "vocab": tp,
+        # EP when expert count divides TP, else TP inside each expert:
+        "experts": tp if experts_divisible else None,
+        "expert_ff": None if experts_divisible else tp,
+        "expert_cap": None,
+        "layers": None,
+        "cache_seq": tp,        # decode KV cache: sequence-sharded
+        "cache_batch": dp,
+        "ssm_state": None,
+        "features": tp if tp_strategy == "feature" else None,
+        # ZeRO-1: optimizer state sharded over the data axis as well
+        "zero": (dp if zero1 else None),
+    }
+    return ShardingRules(mesh=mesh, rules=rules)
+
+
+_STATE = threading.local()
+
+
+def current_rules() -> Optional[ShardingRules]:
+    return getattr(_STATE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = rules
+    try:
+        yield rules
+    finally:
+        _STATE.rules = prev
+
+
+def spec_for(*logical_axes: Optional[str]) -> Optional[P]:
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return None
+    return r.spec(logical_axes)
+
+
+def logical(x, *logical_axes: Optional[str]):
+    """Annotate ``x`` with logical axes (sharding constraint if rules active)."""
+    r = current_rules()
+    if r is None or r.mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(r.mesh, r.spec(logical_axes)))
+
+
+# alias used by model code
+constraint = logical

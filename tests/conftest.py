@@ -1,0 +1,15 @@
+import os
+import sys
+
+# tests run on the single real CPU device; the 512-device production mesh is
+# exercised only by the dry-run subprocess test (per assignment instructions,
+# the fake-device flag must NOT be set globally).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

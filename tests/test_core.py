@@ -1,0 +1,182 @@
+"""Core methodology invariants: signatures, clustering, selection,
+reconstruction, coalescing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (region_signature, primitive_weights, choose_k,
+                        kmeans, bic_score, select_regions, discover_sets,
+                        drop_insignificant, coalesce_stream,
+                        estimate_totals, reconstruction_errors)
+from repro.core.regions import Region, RegionStream
+from repro.instrument.counters import CounterBank
+
+
+# -------------------------- signatures -----------------------------------
+
+def test_signature_normalised_blocks():
+    def f(x, w):
+        return jnp.tanh(x @ w).sum()
+    sig = region_signature(f, (np.ones((8, 16), np.float32),
+                               np.ones((16, 4), np.float32)))
+    assert sig.shape == (64,)
+    assert sig[:32].sum() == pytest.approx(1.0)       # PV block
+    assert sig[32:48].sum() == pytest.approx(1.0)     # RDV block
+    assert sig[48:].sum() == pytest.approx(0.0)       # no address stream
+
+
+def test_signature_deterministic_and_shape_sensitive():
+    def f(x):
+        return (x * x).sum()
+    a = np.ones((32,), np.float32)
+    b = np.ones((64,), np.float32)
+    s1 = region_signature(f, (a,))
+    s2 = region_signature(f, (a,))
+    s3 = region_signature(f, (b,))
+    assert np.allclose(s1, s2)
+    assert not np.allclose(s1, s3)      # work-weighted PV sees the size
+
+
+def test_primitive_weights_scan_multiplier():
+    import jax
+
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def f10(x):
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    def f1(x):
+        y, _ = jax.lax.scan(body, x, None, length=1)
+        return y
+
+    x = np.ones((16, 16), np.float32)
+    w10 = primitive_weights(jax.make_jaxpr(f10)(x))
+    w1 = primitive_weights(jax.make_jaxpr(f1)(x))
+    assert w10["dot_general"] == pytest.approx(10 * w1["dot_general"])
+
+
+def test_distinct_kernels_distinct_signatures():
+    def fa(x):
+        return jnp.tanh(x).sum()
+
+    def fb(x):
+        return (x @ x.T).sum()
+
+    x = np.ones((32, 32), np.float32)
+    sa = region_signature(fa, (x,))
+    sb = region_signature(fb, (x,))
+    assert np.linalg.norm(sa - sb) > 1e-3
+
+
+# -------------------------- clustering -----------------------------------
+
+def test_choose_k_finds_planted_clusters(rng):
+    X = np.concatenate([rng.normal(8 * i, 0.05, size=(25, 6))
+                        for i in range(4)])
+    cl = choose_k(X, max_k=10, seed=0, restarts=2)
+    assert cl.k == 4
+    # all members of a planted cluster share a label
+    for i in range(4):
+        assert len(set(cl.assign[25 * i: 25 * (i + 1)].tolist())) == 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000))
+def test_kmeans_assignment_is_nearest_center(seed):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(40, 4))
+    c, a, sse = kmeans(X, 3, seed=seed, restarts=1)
+    d2 = ((X[:, None, :] - c[None]) ** 2).sum(-1)
+    assert (a == d2.argmin(1)).all()
+    assert sse == pytest.approx(d2.min(1).sum(), rel=1e-3)
+
+
+def test_bic_prefers_true_k(rng):
+    X = np.concatenate([rng.normal(6 * i, 0.1, size=(30, 5))
+                        for i in range(3)])
+    scores = {}
+    for k in (1, 2, 3, 4, 5):
+        c, a, sse = kmeans(X, k, seed=0, restarts=2)
+        scores[k] = bic_score(X, c, a, sse)
+    assert max(scores, key=scores.get) in (3, 4)
+    assert scores[3] > scores[1]
+
+
+# -------------------------- selection ------------------------------------
+
+def _fake_stream(n, counters_fn, sig_fn, weights=None):
+    s = RegionStream("fake", 1, "f32")
+    for i in range(n):
+        r = Region(index=i, name=f"r{i}")
+        r.signature = np.asarray(sig_fn(i), np.float64)
+        r.counters["a"] = CounterBank(values=dict(counters_fn(i)))
+        r.weight = (weights[i] if weights is not None
+                    else r.counters["a"].values["instructions"])
+        s.regions.append(r)
+    return s
+
+
+def test_multipliers_sum_to_region_count(rng):
+    X = rng.normal(size=(30, 8))
+    rs = select_regions(X, max_k=8, seed=1, restarts=1)
+    assert rs.multipliers.sum() == 30
+    assert len(set(rs.rep_indices.tolist())) == rs.k
+
+
+def test_reconstruction_exact_for_identical_clusters():
+    # two region kinds, identical counters inside a kind -> exact estimate
+    stream = _fake_stream(
+        20,
+        counters_fn=lambda i: {"cycles": 10.0 if i % 2 else 30.0,
+                               "instructions": 5.0 if i % 2 else 7.0},
+        sig_fn=lambda i: [1.0, 0.0] if i % 2 else [0.0, 1.0])
+    rs = select_regions(stream.signatures(), max_k=5, seed=0, restarts=1)
+    errs = reconstruction_errors(stream, rs, "a", ("cycles", "instructions"))
+    assert errs["cycles"] < 1e-9 and errs["instructions"] < 1e-9
+
+
+def test_discovery_jitter_produces_valid_sets(rng):
+    X = rng.normal(size=(40, 6))
+    sets = discover_sets(X, n_runs=5, jitter=0.05, max_k=6, restarts=1)
+    assert len(sets) == 5
+    for s in sets:
+        assert s.multipliers.sum() == 40
+
+
+def test_drop_insignificant_keeps_mass(rng):
+    X = rng.normal(size=(50, 4))
+    w = rng.random(50)
+    rs = select_regions(X, max_k=10, seed=0, restarts=1)
+    pruned = drop_insignificant(rs, w, min_frac=0.2)
+    assert 1 <= pruned.k <= rs.k
+
+
+# -------------------------- coalescing -----------------------------------
+
+def test_coalesce_conserves_counters_and_weight():
+    stream = _fake_stream(
+        40,
+        counters_fn=lambda i: {"cycles": 1.0 + i, "instructions": 2.0},
+        sig_fn=lambda i: [i % 3, 1.0, 0.5])
+    total = stream.totals("a", ("cycles", "instructions"))
+    merged = coalesce_stream(stream, min_frac=0.2)
+    assert len(merged) <= 5
+    mtotal = merged.totals("a", ("cycles", "instructions"))
+    for m in total:
+        assert mtotal[m] == pytest.approx(total[m])
+    assert merged.weights().sum() == pytest.approx(stream.weights().sum())
+    # merged_from partitions the original indices in order
+    covered = [i for r in merged.regions for i in r.merged_from]
+    assert covered == list(range(40))
+
+
+def test_coalesce_min_fraction_respected():
+    stream = _fake_stream(100, lambda i: {"cycles": 1.0, "instructions": 1.0},
+                          lambda i: [1.0])
+    merged = coalesce_stream(stream, min_frac=0.1)
+    w = merged.weights()
+    assert (w[:-1] >= 0.1 * w.sum() - 1e-9).all()

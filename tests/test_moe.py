@@ -1,0 +1,105 @@
+"""MoE invariants: routing conservation, gates, capacity drops, expert
+permutation equivariance."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+from repro.models.moe import moe_ffn, _local_moe
+
+
+def _cfg(E=4, k=2, cf=8.0):
+    return ModelConfig(name="t", family="moe", n_layers=1, d_model=16,
+                       n_heads=2, n_kv_heads=2, d_ff=32, vocab=64,
+                       n_experts=E, experts_per_token=k, capacity_factor=cf)
+
+
+def _params(rng, cfg):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    g = lambda *s: jnp.asarray(rng.normal(size=s) * 0.1, jnp.float32)
+    return {"wr": g(D, E), "w1": g(E, D, F), "w3": g(E, D, F),
+            "w2": g(E, F, D)}
+
+
+def test_output_shape_and_finite(rng):
+    cfg = _cfg()
+    p = _params(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    out, aux = moe_ffn(x, p, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 1.0 - 1e-3   # Switch aux is >= 1 at balance
+
+
+def test_expert_permutation_equivariance(rng):
+    """Permuting expert weights together with router columns is a no-op
+    (when capacity is large enough that nothing drops)."""
+    cfg = _cfg(E=4, k=1, cf=16.0)
+    p = _params(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16)), jnp.float32)
+    out1, _ = moe_ffn(x, p, cfg)
+    perm = np.array([2, 0, 3, 1])
+    p2 = {"wr": p["wr"][:, perm], "w1": p["w1"][perm], "w3": p["w3"][perm],
+          "w2": p["w2"][perm]}
+    out2, _ = moe_ffn(x, p2, cfg)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-5)
+
+
+def test_capacity_drop_zeroes_tokens(rng):
+    """With capacity 0-ish every token drops -> output is exactly zero."""
+    cfg = _cfg(E=2, k=1, cf=1e-9)
+    p = _params(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(1, 64, 16)), jnp.float32)
+    # capacity computed as max(1, ...) -> at most E*cap=2*4 tokens survive
+    out, _ = moe_ffn(x, p, cfg)
+    nonzero_rows = int((np.abs(np.asarray(out[0])).sum(-1) > 1e-9).sum())
+    assert nonzero_rows <= 8
+
+
+def test_top1_each_token_single_expert(rng):
+    """For k=1 and huge capacity, each token's output equals the dense
+    computation of its argmax expert (gates renormalise to 1)."""
+    cfg = _cfg(E=4, k=1, cf=16.0)
+    p = _params(rng, cfg)
+    T, D = 32, 16
+    x2d = jnp.asarray(rng.normal(size=(T, D)), jnp.float32)
+    out, _ = _local_moe(x2d, p["wr"], p["w1"], p["w3"], p["w2"], cfg,
+                        e_local=4, base=jnp.int32(0), capacity=T)
+    eid = np.asarray(jnp.argmax(x2d @ p["wr"], axis=-1))
+    for t in range(T):
+        e = eid[t]
+        h = x2d[t]
+        dense = (jax.nn.silu(h @ p["w1"][e]) * (h @ p["w3"][e])) @ p["w2"][e]
+        np.testing.assert_allclose(np.asarray(out[t]), np.asarray(dense),
+                                   atol=1e-5)
+
+
+def test_top2_gates_sum_to_one(rng):
+    """k=2 outputs are convex combinations: scaling both experts' w2 by c
+    scales the output by c (checks gate renormalisation)."""
+    cfg = _cfg(E=4, k=2, cf=16.0)
+    p = _params(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(1, 16, 16)), jnp.float32)
+    out1, _ = moe_ffn(x, p, cfg)
+    p2 = dict(p, w2=p["w2"] * 2.0)
+    out2, _ = moe_ffn(x, p2, cfg)
+    np.testing.assert_allclose(np.asarray(out2), 2 * np.asarray(out1),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_gradients_finite(rng):
+    cfg = _cfg()
+    p = _params(rng, cfg)
+    x = jnp.asarray(rng.normal(size=(1, 8, 16)), jnp.float32)
+
+    def loss(p):
+        out, aux = moe_ffn(x, p, cfg)
+        return (out ** 2).sum() + aux
+
+    g = jax.grad(loss)(p)
+    for leaf in jax.tree.leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+    # router must receive gradient through the gates
+    assert float(jnp.abs(g["wr"]).sum()) > 0

@@ -1,0 +1,65 @@
+"""Property tests: LRU stack distances (oracle vs masked vs Pallas kernel)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.reuse import (lru_stack_distances_oracle,
+                              stack_distances_masked, prev_next_occurrence,
+                              reuse_histogram)
+from repro.kernels.ops import stack_distances
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 12), min_size=1, max_size=200))
+def test_masked_matches_oracle(addrs):
+    a = np.asarray(addrs, dtype=np.int64)
+    assert (stack_distances_masked(a) == lru_stack_distances_oracle(a)).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=300),
+       st.integers(1, 7))
+def test_masked_blocking_invariant(addrs, block):
+    """Distance values must not depend on the block size."""
+    a = np.asarray(addrs, dtype=np.int64)
+    assert (stack_distances_masked(a, block=block)
+            == stack_distances_masked(a, block=10 ** 9)).all()
+
+
+def test_kernel_matches_oracle_large(rng):
+    a = rng.integers(0, 97, size=3000)
+    assert (stack_distances(a) == lru_stack_distances_oracle(a)).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 9), min_size=2, max_size=120))
+def test_kernel_matches_oracle(addrs):
+    a = np.asarray(addrs, dtype=np.int64)
+    assert (stack_distances(a) == lru_stack_distances_oracle(a)).all()
+
+
+def test_prev_next_consistency(rng):
+    a = rng.integers(0, 17, size=500)
+    prev, nxt = prev_next_occurrence(a)
+    for i in range(len(a)):
+        if prev[i] >= 0:
+            assert a[prev[i]] == a[i]
+            assert nxt[prev[i]] == i
+        if nxt[i] < len(a):
+            assert a[nxt[i]] == a[i]
+
+
+def test_first_touch_is_infinite():
+    a = np.array([5, 6, 7, 5, 6, 7])
+    d = lru_stack_distances_oracle(a)
+    assert (d[:3] == -1).all() and (d[3:] == 2).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 50), min_size=1, max_size=200))
+def test_histogram_conserves_mass(addrs):
+    a = np.asarray(addrs, dtype=np.int64)
+    d = lru_stack_distances_oracle(a)
+    h = reuse_histogram(d, n_bins=12)
+    assert h.sum() == pytest.approx(len(a))
+    assert h[-1] == pytest.approx(float((d < 0).sum()))  # cold misses bin

@@ -1,0 +1,148 @@
+"""Sequence-mixer equivalences: flash-vs-reference attention (fwd+grad),
+chunked-vs-recurrent linear attention, sLSTM scan-vs-step."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import (flash_attention, reference_attention,
+                                    decode_attention)
+from repro.models.ssm import (chunked_linear_attention,
+                              linear_attention_step, slstm_seq, slstm_step)
+
+
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 24), (False, 0)])
+@pytest.mark.parametrize("B,S,H,KV,D,bq,bkv", [
+    (2, 96, 8, 4, 16, 32, 16),
+    (1, 64, 4, 4, 32, 16, 64),
+    (1, 80, 2, 1, 16, 32, 32),
+])
+def test_flash_xla_matches_reference(B, S, H, KV, D, bq, bkv, causal,
+                                     window, rng):
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    o1 = flash_attention(q, k, v, causal=causal, window=window,
+                         block_q=bq, block_kv=bkv)
+    o2 = reference_attention(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_gradients_match_reference(rng):
+    B, S, H, KV, D = 1, 64, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+
+    def lf(q, k, v):
+        return (flash_attention(q, k, v, block_q=16, block_kv=16) ** 2).sum()
+
+    def lr(q, k, v):
+        return (reference_attention(q, k, v) ** 2).sum()
+
+    g1 = jax.grad(lf, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lr, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-4, rtol=1e-3)
+
+
+def test_decode_matches_last_position(rng):
+    B, S, H, KV, D = 2, 48, 4, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, KV, D)), jnp.float32)
+    od = decode_attention(q[:, -1:], k, v, S)
+    of = reference_attention(q, k, v, causal=True)[:, -1:]
+    np.testing.assert_allclose(np.asarray(od), np.asarray(of), atol=2e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([1, 2, 4, 8, 16]),
+       st.booleans())
+def test_chunked_linear_attention_matches_recurrence(seed, chunk, normalize):
+    rng = np.random.default_rng(seed)
+    B, S, H, Dk, Dv = 1, 16, 2, 4, 6
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, Dv)), jnp.float32)
+    ld = jnp.asarray(-np.abs(rng.normal(size=(B, S, H)) * 0.2), jnp.float32)
+    gi = jnp.asarray(np.abs(rng.normal(size=(B, S, H))), jnp.float32)
+    yc, (st_c, nst_c) = chunked_linear_attention(q, k, v, ld, gi, chunk=chunk,
+                                                 normalize=normalize)
+    state = jnp.zeros((B, H, Dk, Dv))
+    nstate = jnp.zeros((B, H, Dk))
+    ys = []
+    for t in range(S):
+        y, state, nstate = linear_attention_step(
+            state, nstate, q[:, t], k[:, t], v[:, t], ld[:, t], gi[:, t],
+            normalize=normalize)
+        ys.append(y)
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(jnp.stack(ys, 1)),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_c), np.asarray(state), atol=1e-4)
+
+
+def test_chunked_ragged_seq_padding(rng):
+    """S not divisible by chunk: identity-padded steps must not change
+    outputs or final state."""
+    B, S, H, Dk, Dv = 1, 13, 2, 4, 4
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, H, Dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, H, Dv)), jnp.float32)
+    ld = jnp.asarray(-np.abs(rng.normal(size=(B, S, H)) * 0.1), jnp.float32)
+    gi = jnp.asarray(np.abs(rng.normal(size=(B, S, H))), jnp.float32)
+    y1, (s1, _) = chunked_linear_attention(q, k, v, ld, gi, chunk=4)
+    y2, (s2, _) = chunked_linear_attention(q, k, v, ld, gi, chunk=13)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4)
+
+
+def test_slstm_scan_matches_step(rng):
+    B, S, D, H = 2, 10, 16, 2
+    P = D // H
+    p = {"wx": jnp.asarray(rng.normal(size=(D, 4 * D)) * 0.2, jnp.float32),
+         "r": jnp.asarray(rng.normal(size=(4, H, P, P)) * 0.2, jnp.float32),
+         "b": jnp.zeros((4 * D,), jnp.float32),
+         "wo": jnp.asarray(rng.normal(size=(D, D)) * 0.2, jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+    y_seq, (h, c) = slstm_seq(x, p, n_heads=H)
+    state = (jnp.zeros((B, D)), jnp.zeros((B, D)))
+    ys = []
+    for t in range(S):
+        y, state = slstm_step(x[:, t: t + 1], p, state, n_heads=H)
+        ys.append(y[:, 0])
+    np.testing.assert_allclose(np.asarray(y_seq),
+                               np.asarray(jnp.stack(ys, 1)), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(state[0]), atol=1e-4)
+
+
+def test_slstm_fused_weight_grad_matches_autodiff(rng):
+    """§Perf cell C: the cuDNN-style batched RNN weight gradient must be
+    numerically identical to autodiff-through-scan."""
+    import os
+    import jax
+    from repro.models.ssm import slstm_seq
+    B, S, D, H = 2, 12, 16, 2
+    P = D // H
+    p = {"wx": jnp.asarray(rng.normal(size=(D, 4 * D)) * 0.2, jnp.float32),
+         "r": jnp.asarray(rng.normal(size=(4, H, P, P)) * 0.2, jnp.float32),
+         "b": jnp.asarray(rng.normal(size=(4 * D,)) * 0.1, jnp.float32),
+         "wo": jnp.asarray(rng.normal(size=(D, D)) * 0.2, jnp.float32)}
+    x = jnp.asarray(rng.normal(size=(B, S, D)), jnp.float32)
+
+    def loss(p, x, fused):
+        os.environ["REPRO_SLSTM_FUSED_GRAD"] = "1" if fused else "0"
+        y, (h, c) = slstm_seq(x, p, n_heads=H)
+        return (y ** 2).sum() + (h * h).sum() + (c * c).sum()
+
+    try:
+        g0 = jax.grad(loss, argnums=(0, 1))(p, x, False)
+        g1 = jax.grad(loss, argnums=(0, 1))(p, x, True)
+    finally:
+        os.environ.pop("REPRO_SLSTM_FUSED_GRAD", None)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,216 @@
+"""Substrate tests: data pipeline, checkpointing, optimizer, HLO walker."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.data import SyntheticLM, Prefetcher
+from repro.checkpoint import Checkpointer
+from repro.optim import (adamw_init, adamw_update, cosine_schedule,
+                         quantize_int8, dequantize_int8,
+                         compressed_psum, ErrorFeedback, zero1_axes)
+from repro.optim.compress import compress_with_feedback
+from repro.instrument.hloanalysis import analyze_compiled, analyze_hlo_text
+from repro.instrument.hwmodel import roofline_terms, TPU_V5E
+
+
+# ------------------------------ data --------------------------------------
+
+def test_data_step_indexed_determinism():
+    ds = SyntheticLM(vocab=101, seq_len=32, global_batch=8, seed=1)
+    assert (ds.batch(7)["tokens"] == ds.batch(7)["tokens"]).all()
+    assert not (ds.batch(7)["tokens"] == ds.batch(8)["tokens"]).all()
+    assert (ds.batch(7)["labels"][:, :-1] == ds.batch(7)["tokens"][:, 1:]).all()
+    assert int(ds.batch(3)["tokens"].max()) < 101
+
+
+def test_data_host_shards_disjoint():
+    full = [SyntheticLM(vocab=50, seq_len=8, global_batch=8, seed=2,
+                        n_hosts=4, host_id=h).batch(0)["tokens"]
+            for h in range(4)]
+    stacked = np.concatenate(full)
+    assert stacked.shape == (8, 8)
+    # different host rows differ (overwhelmingly likely under hashing)
+    assert len({r.tobytes() for r in stacked}) == 8
+
+
+def test_prefetcher_order_and_fast_forward():
+    ds = SyntheticLM(vocab=50, seq_len=8, global_batch=4, seed=3)
+    pf = Prefetcher(ds, start_step=41)
+    steps = [next(pf)[0] for _ in range(3)]
+    pf.close()
+    assert steps == [41, 42, 43]     # resume without replay
+
+
+# --------------------------- checkpointing --------------------------------
+
+def test_checkpoint_roundtrip_and_gc():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        tree = {"w": jnp.arange(12.0).reshape(3, 4),
+                "nest": {"b": jnp.ones(5, jnp.bfloat16)},
+                "lst": [jnp.zeros(2), jnp.full((2, 2), 7.0)]}
+        for s in (10, 20, 30):
+            ck.save(s, tree)
+        ck.wait()
+        assert ck.available() == [20, 30]
+        step, restored = ck.restore(tree)
+        assert step == 30
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32))
+        ck.close()
+
+
+def test_checkpoint_atomicity_ignores_tmp():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=3)
+        ck.save(5, {"x": jnp.ones(3)})
+        ck.wait()
+        # simulate a crashed half-write
+        os.makedirs(os.path.join(d, "step_00000009.tmp"))
+        assert ck.available() == [5]
+        assert ck.latest() == 5
+        ck.close()
+
+
+def test_checkpoint_restore_into_abstract_target():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=1)
+        tree = {"w": jnp.arange(6.0).reshape(2, 3)}
+        ck.save(1, tree)
+        ck.wait()
+        target = {"w": jax.ShapeDtypeStruct((2, 3), jnp.float32)}
+        _, restored = ck.restore(target)
+        np.testing.assert_allclose(np.asarray(restored["w"]),
+                                   np.asarray(tree["w"]))
+        ck.close()
+
+
+# ----------------------------- optimizer ----------------------------------
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.full((4,), 5.0)}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(g, state, params, lr=5e-2,
+                                     weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_single_step_reference_math():
+    p0, g0, lr, b1, b2, eps = 2.0, 0.5, 0.1, 0.9, 0.95, 1e-8
+    params = {"w": jnp.array([p0])}
+    state = adamw_init(params)
+    new, _ = adamw_update({"w": jnp.array([g0])}, state, params, lr=lr,
+                          b1=b1, b2=b2, eps=eps, weight_decay=0.0,
+                          clip_norm=0.0)
+    m = (1 - b1) * g0 / (1 - b1)
+    v = (1 - b2) * g0 * g0 / (1 - b2)
+    want = p0 - lr * m / (np.sqrt(v) + eps)
+    np.testing.assert_allclose(float(new["w"][0]), want, rtol=1e-5)
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(1e-3, warmup=10, total=100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-2)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_int8_quantization_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    q, s = quantize_int8(x)
+    err = np.abs(np.asarray(dequantize_int8(q, s) - x))
+    assert err.max() <= float(s) * 0.5 + 1e-7
+
+
+def test_error_feedback_compression_converges():
+    """EF-compressed gradient descent still reaches the optimum."""
+    w = jnp.full((8,), 3.0)
+    ef = ErrorFeedback.init({"w": w})
+    for _ in range(300):
+        g = {"w": 2 * w}
+        q, s, ef = compress_with_feedback(g, ef)
+        g_hat = dequantize_int8(q["w"], s["w"])
+        w = w - 0.05 * g_hat
+    assert float(jnp.abs(w).max()) < 1e-2
+
+
+def test_zero1_axes_picks_divisible_dim():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    # first dim 126 not divisible by 16 -> falls through to dim 2 (16384)
+    axes = zero1_axes(("layers", None, None), (126, 3, 16384), FakeMesh())
+    assert axes == ("layers", None, "zero")
+
+
+# ----------------------------- HLO walker ---------------------------------
+
+def test_walker_matches_xla_on_unrolled_dots():
+    def f(x, w):
+        for _ in range(4):
+            x = jnp.tanh(x @ w)
+        return x
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    compiled = jax.jit(f).lower(x, x).compile()
+    cost = analyze_compiled(compiled)
+    want_dot_flops = 4 * 2 * 128 ** 3
+    assert cost.flops == pytest.approx(want_dot_flops, rel=0.05)
+    xla = compiled.cost_analysis()
+    assert cost.flops == pytest.approx(float(xla["flops"]), rel=0.05)
+
+
+def test_walker_multiplies_scan_trips():
+    def body(c, _):
+        return jnp.tanh(c @ c), None
+
+    def f(x):
+        y, _ = jax.lax.scan(body, x, None, length=12)
+        return y
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    cost = analyze_compiled(jax.jit(f).lower(x).compile())
+    assert cost.flops == pytest.approx(12 * 2 * 64 ** 3, rel=0.1)
+
+
+def test_walker_slice_aware_fusion_traffic():
+    """Scan slicing per-layer weights must not charge the full stack."""
+    def body(c, w):
+        return jnp.tanh(c @ w), None
+
+    def f(x, ws):
+        y, _ = jax.lax.scan(body, x, ws)
+        return y
+
+    L, D = 16, 128
+    x = jax.ShapeDtypeStruct((D, D), jnp.float32)
+    ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
+    cost = analyze_compiled(jax.jit(f).lower(x, ws).compile())
+    stack_bytes = L * D * D * 4
+    # multi-consumer counting legitimately reaches a few x stack; the
+    # regression guarded against is O(L x stack) = 2·L·stack and beyond
+    assert stack_bytes < cost.hbm_bytes < 12 * stack_bytes
+
+
+def test_roofline_terms_math():
+    t = roofline_terms(flops=197e12, hbm_bytes=819e9, collective_bytes=0,
+                       hw=TPU_V5E, dtype="bf16")
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(1.0)
+    assert t.dominant in ("compute", "memory")
+    assert t.bound_s == pytest.approx(1.0)
